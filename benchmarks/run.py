@@ -1,0 +1,68 @@
+"""Benchmark harness — one function per paper table. CSV to stdout.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--tables table1,table3]
+
+Default (quick) sizes keep a single-CPU-core run to a few minutes; --full
+uses the paper's 1M/4M/8M sizes. The simulated-processor methodology and the
+predicted-vs-observed framing are described in benchmarks/common.py and
+EXPERIMENTS.md §Paper-validation.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import tables
+from benchmarks.common import emit, t_comp_per_cmp
+
+M = 1 << 20
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-size inputs (1M/4M/8M)")
+    ap.add_argument("--tables", type=str, default="all")
+    args = ap.parse_args()
+
+    if args.full:
+        from benchmarks import common
+
+        common.REPEATS = 4
+        sizes_12 = [M, 4 * M]
+        n_3 = 8 * M
+        n_phase = 4 * M
+        sizes_10 = [M, 4 * M]
+        n_9 = 8 * M
+        ps = (8, 16, 32, 64)
+    else:
+        sizes_12 = [M // 4]
+        n_3 = M // 4
+        n_phase = M // 4
+        sizes_10 = [M // 16, M // 4]
+        n_9 = M // 4
+        ps = (8, 16, 32)
+
+    want = None if args.tables == "all" else set(args.tables.split(","))
+
+    def go(name, fn, *a, **kw):
+        if want is not None and name not in want:
+            return
+        t0 = time.time()
+        fn(*a, **kw)
+        emit("meta", {"table": name, "wall_s": round(time.time() - t0, 1)})
+
+    emit("meta", {"t_comp_per_cmp_ns": round(t_comp_per_cmp() * 1e9, 3)})
+    go("table1", tables.table_1_2_runtime_by_distribution, sizes_12, p=32)
+    go("table3", tables.table_3_scalability, n_3, ps=ps)
+    go("table4_7", tables.tables_4_7_phase_breakdown, n_phase, ps=ps)
+    go("table9", tables.table_8_9_comparisons, n_9, ps=ps)
+    go("table10", tables.table_10_scalability_four_variants, sizes_10, ps=ps)
+    go("table11", tables.table_11_dsq_vs_44, M // 4, ps=ps)
+    go("bsi", tables.table_bsi_baseline, M // 4)
+    go("bsp_model", tables.table_bsp_model_validation, n_3 if not args.full else 8 * M)
+    go("duplicates", tables.table_duplicate_handling_overhead, M // 4)
+
+
+if __name__ == "__main__":
+    main()

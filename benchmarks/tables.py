@@ -1,0 +1,205 @@
+"""One benchmark per paper table (Tables 1-11) + the BSP-model validation.
+
+Distribution/variant naming follows the paper: [DSR]/[DSQ] = deterministic
+with radix/comparison local sort, [RSR]/[RSQ] = randomized (IRAN) likewise,
+[BSI] = bitonic. Input sets §6.3: [U],[G],[B],[2-G],[S],[DD],[WR].
+
+Paper reference values (Cray T3D seconds) are printed alongside ours where
+the paper's table gives them — labeled ``paper_t3d`` — so the shape of the
+comparison (ratios between variants/distributions, phase percentages) can be
+validated even though absolute CPU numbers differ by hardware.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SortConfig, bsp_sort, datagen, gathered_output, phase_fns, predict
+from benchmarks.common import emit, predicted_t3d, seq_sort_time, t_comp_per_cmp, timeit
+
+VARIANTS = {
+    "RSR": dict(algorithm="iran", local_sort="radix"),
+    "RSQ": dict(algorithm="iran", local_sort="lax"),
+    "DSR": dict(algorithm="det", local_sort="radix"),
+    "DSQ": dict(algorithm="det", local_sort="lax"),
+    "BSI": dict(algorithm="bitonic", local_sort="lax"),
+}
+DISTS = ["U", "G", "2-G", "B", "S", "DD", "WR"]
+
+
+def _sort_fn(p, n_p, **kw):
+    cfg = SortConfig(p=p, n_per_proc=n_p, routing="a2a_dense", pair_capacity="exact", **kw)
+
+    def run(x):
+        res, _ = bsp_sort(x, cfg)
+        return res.buf
+
+    return jax.jit(run), cfg
+
+
+def _run_variant(variant: str, dist: str, p: int, n: int) -> Dict:
+    n_p = n // p
+    fn, cfg = _sort_fn(p, n_p, **VARIANTS[variant])
+    x = jnp.asarray(datagen.generate(dist, p, n_p, seed=21))
+    t = timeit(fn, x)
+    return {"t": t, "cfg": cfg}
+
+
+def table_1_2_runtime_by_distribution(sizes, p=64, variants=("RSR", "RSQ", "DSR", "DSQ")):
+    """Tables 1 & 2: execution time per input set, p=64."""
+    for n in sizes:
+        for v in variants:
+            table = "table1" if v.startswith("R") else "table2"
+            row = {"variant": v, "n": n, "p": p}
+            for dist in DISTS:
+                r = _run_variant(v, dist, p, n)
+                row[dist] = round(r["t"], 4)
+            seq = seq_sort_time(n)
+            row["work_eff_U"] = round(seq / row["U"], 3)
+            emit(table, row)
+
+
+def table_3_scalability(n, ps=(8, 16, 32, 64)):
+    """Table 3: scalability on [U] and [WR] + efficiencies."""
+    for v in ("RSR", "RSQ", "DSR", "DSQ"):
+        for dist in ("U", "WR"):
+            row = {"variant": v, "dist": dist, "n": n}
+            for p in ps:
+                t = _run_variant(v, dist, p, n)["t"]
+                row[f"p{p}"] = round(t, 4)
+            cfg = SortConfig(p=ps[-1], n_per_proc=n // ps[-1], **{k: vv for k, vv in VARIANTS[v].items()})
+            row["pred_t3d_eff"] = round(predicted_t3d(cfg).efficiency, 3)
+            row["work_eff"] = round(seq_sort_time(n) / row[f"p{ps[-1]}"], 3)
+            emit("table3", row)
+
+
+def tables_4_7_phase_breakdown(n, ps=(8, 32, 64)):
+    """Tables 4-7: per-phase times and percentages ([RSR],[RSQ],[DSR],[DSQ] on [U])."""
+    tables = {"RSR": "table4", "RSQ": "table5", "DSR": "table6", "DSQ": "table7"}
+    for v, table in tables.items():
+        for p in ps:
+            n_p = n // p
+            cfg = SortConfig(
+                p=p, n_per_proc=n_p, routing="a2a_dense", pair_capacity="exact",
+                **VARIANTS[v],
+            )
+            if cfg.algorithm == "bitonic":
+                continue
+            fns = phase_fns(cfg)
+            x = jnp.asarray(datagen.generate("U", p, n_p, seed=21))
+            times = {}
+            xs = fns["SeqSort"](x)
+            times["Ph2_SeqSort"] = timeit(fns["SeqSort"], x)
+            splits = fns["Sampling"](xs)
+            times["Ph3_Sampling"] = timeit(fns["Sampling"], xs)
+            bounds = fns["Prefix"](xs, splits)
+            times["Ph4_Prefix"] = timeit(fns["Prefix"], xs, splits)
+            buf, cnt, ovf = fns["Routing"](xs, bounds)
+            times["Ph5_Routing"] = timeit(fns["Routing"], xs, bounds)
+            times["Ph6_Merging"] = timeit(fns["Merging"], buf)
+            total = sum(times.values())
+            row = {"variant": v, "n": n, "p": p, "total": round(total, 4)}
+            for k, t in times.items():
+                row[k] = round(t, 4)
+                row[f"{k}_pct"] = round(100 * t / total, 1)
+            row["seq_pct"] = round(
+                100 * (times["Ph2_SeqSort"] + times["Ph6_Merging"]) / total, 1
+            )
+            emit(table, row)
+
+
+def table_8_9_comparisons(n, ps=(8, 16, 32, 64)):
+    """Tables 8/9: our variants vs the paper's published T3D numbers."""
+    paper_t9 = {  # (algorithm, input) -> {p: seconds} — paper Table 9, n=8M
+        ("RSR", "U"): {8: 3.16, 16: 1.74, 32: 0.956, 64: 0.526, 128: 0.300},
+        ("DSR", "WR"): {8: 3.18, 16: 1.73, 32: 0.945, 64: 0.530, 128: 0.372},
+        ("RSQ", "WR"): {8: 3.64, 16: 1.82, 32: 0.938, 64: 0.486, 128: 0.272},
+        ("DSQ", "WR"): {8: 3.65, 16: 1.82, 32: 0.930, 64: 0.489, 128: 0.337},
+    }
+    for (v, dist), ref in paper_t9.items():
+        row = {"variant": v, "dist": dist, "n": n}
+        for p in ps:
+            row[f"p{p}"] = round(_run_variant(v, dist, p, n)["t"], 4)
+            if p in ref:
+                row[f"paper_t3d_p{p}"] = ref[p]
+        # scaling-shape check: our p_min/p_max ratio vs the paper's
+        lo, hi = ps[0], ps[-1]
+        row[f"our_p{lo}_over_p{hi}"] = round(row[f"p{lo}"] / row[f"p{hi}"], 2)
+        row[f"paper_p{lo}_over_p{hi}"] = round(ref[lo] / ref[hi], 2)
+        emit("table9", row)
+
+
+def table_10_scalability_four_variants(sizes, ps=(8, 16, 32, 64)):
+    for v in ("DSR", "DSQ", "RSR", "RSQ"):
+        for n in sizes:
+            row = {"variant": v, "n": n}
+            for p in ps:
+                row[f"p{p}"] = round(_run_variant(v, "U", p, n)["t"], 4)
+            emit("table10", row)
+
+
+def table_11_dsq_vs_44(n, ps=(8, 16, 32, 64)):
+    paper_44 = {8: 0.462, 16: 0.240, 32: 0.137, 64: 0.117}  # [44] on 1e6 keys
+    paper_dsq = {8: 0.413, 16: 0.222, 32: 0.127, 64: 0.075}
+    row = {"variant": "DSQ", "dist": "U", "n": n}
+    for p in ps:
+        row[f"p{p}"] = round(_run_variant("DSQ", "U", p, n)["t"], 4)
+        row[f"paper_dsq_p{p}"] = paper_dsq[p]
+        row[f"paper44_p{p}"] = paper_44[p]
+    emit("table11", row)
+
+
+def table_bsi_baseline(n, p=16):
+    """[BSI] vs sample-sort (paper §6.2: bitonic loses beyond small sizes)."""
+    for v in ("BSI", "DSQ"):
+        t = _run_variant(v, "U", p, n)["t"]
+        emit("bsi", {"variant": v, "n": n, "p": p, "t": round(t, 4)})
+
+
+def table_bsp_model_validation(n, ps=(16, 32, 64, 128)):
+    """The paper's §6 predicted-vs-observed methodology.
+
+    (a) Predicted π/μ/efficiency under the paper's T3D constants —
+        reproduces the paper's ≈66% (det) / ≥66% (ran) claims at n=8M,p=128.
+    (b) Observed max key imbalance vs the ~20% theoretical bound (§6.4).
+    """
+    from repro.core import theoretical_max_imbalance
+
+    for p in ps:
+        for algo in ("det", "iran"):
+            cfg = SortConfig(p=p, n_per_proc=n // p, algorithm=algo)
+            pred = predicted_t3d(cfg)
+            res, _ = bsp_sort(
+                jnp.asarray(datagen.generate("U", p, n // p, seed=21)), cfg
+            )
+            imb = float(np.max(np.asarray(res.count)) / (n / p) - 1.0)
+            emit(
+                "bsp_model",
+                {
+                    "algo": algo,
+                    "n": n,
+                    "p": p,
+                    "pred_pi": round(pred.pi, 3),
+                    "pred_mu": round(pred.mu, 3),
+                    "pred_eff_t3d": round(pred.efficiency, 3),
+                    "observed_imbalance": round(imb, 4),
+                    "theory_imbalance_bound": round(theoretical_max_imbalance(cfg), 3),
+                },
+            )
+
+
+def table_duplicate_handling_overhead(n, p=64):
+    """§6.1: duplicate handling costs 3-6%; compare [U] vs all-duplicates."""
+    fn, cfg = _sort_fn(p, n // p, algorithm="det", local_sort="lax")
+    xu = jnp.asarray(datagen.generate("U", p, n // p, seed=21))
+    xd = jnp.zeros((p, n // p), jnp.int32)  # every key identical
+    tu, td = timeit(fn, xu), timeit(fn, xd)
+    emit(
+        "duplicates",
+        {"n": n, "p": p, "t_U": round(tu, 4), "t_allsame": round(td, 4),
+         "ratio": round(td / tu, 3)},
+    )

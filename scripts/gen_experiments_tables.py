@@ -1,0 +1,75 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from sweep JSON."""
+import json
+import sys
+
+V5E = "197 TF/s bf16 · 819 GB/s HBM · 50 GB/s ICI"
+
+
+def load(path):
+    try:
+        return json.load(open(path))
+    except FileNotFoundError:
+        return {}
+
+
+def main():
+    single = load("dryrun_single_pod.json")
+    multi = load("dryrun_multi_pod.json")
+
+    out = []
+    out.append("### Dry-run matrix (status per cell)\n")
+    out.append("| arch | shape | 16x16 | 2x16x16 | bytes/dev (16x16) | compile s |")
+    out.append("|---|---|---|---|---|---|")
+    for key in single:
+        arch, shape, _ = key.split("|")
+        s = single[key]
+        mkey = f"{arch}|{shape}|2x16x16"
+        m = multi.get(mkey, {})
+        stat = s["status"]
+        mstat = m.get("status", "—")
+        mem = s.get("mem_total_gb", "—")
+        comp = s.get("compile_s", "—")
+        if stat == "skipped":
+            out.append(f"| {arch} | {shape} | skip | skip | — | — |")
+        else:
+            out.append(f"| {arch} | {shape} | {stat} | {mstat} | {mem} GB | {comp} |")
+    out.append("")
+
+    out.append(f"### Roofline terms — single-pod 16x16 (256 chips, {V5E})\n")
+    out.append(
+        "| arch | shape | t_compute (HLO) | t_compute (6N·D) | t_memory | "
+        "t_collective | dominant | useful-FLOPs | roofline frac |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for key, i in single.items():
+        if i["status"] != "ok":
+            continue
+        arch, shape, _ = key.split("|")
+        out.append(
+            f"| {arch} | {shape} | {i['t_compute_s']:.4f} | "
+            f"{i['t_compute_model_s']:.4f} | {i['t_memory_s']:.4f} | "
+            f"{i['t_collective_s']:.4f} | {i['dominant']} | "
+            f"{i.get('useful_flops_ratio', 0):.3f} | "
+            f"{100 * i.get('roofline_fraction', 0):.2f}% |"
+        )
+    out.append("")
+
+    out.append("### Multi-pod deltas (2x16x16, 512 chips) — collective MB/device\n")
+    out.append("| arch | shape | coll MB (1 pod) | coll MB (2 pods) | pod-axis cost |")
+    out.append("|---|---|---|---|---|")
+    for key, i in single.items():
+        if i["status"] != "ok":
+            continue
+        arch, shape, _ = key.split("|")
+        m = multi.get(f"{arch}|{shape}|2x16x16", {})
+        if m.get("status") != "ok":
+            continue
+        c1 = i.get("collective_mb_per_dev", 0)
+        c2 = m.get("collective_mb_per_dev", 0)
+        delta = "—" if not c1 else f"{(c2 - c1) / max(c1, 1e-9) * 100:+.1f}%"
+        out.append(f"| {arch} | {shape} | {c1} | {c2} | {delta} |")
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

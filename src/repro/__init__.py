@@ -1,0 +1,4 @@
+"""repro — BSP Sorting (Gerbessiotis & Siniolakis) as a first-class feature
+of a multi-pod JAX training/serving framework. See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

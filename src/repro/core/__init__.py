@@ -1,0 +1,33 @@
+"""BSP sorting — the paper's primary contribution, as a composable JAX module.
+
+Public API:
+    SortConfig, SortResult        — configuration / result types
+    bsp_sort                      — simulated-processor runner (vmap)
+    bsp_sort_sharded              — real-device runner (shard_map)
+    phase_fns                     — per-phase callables (paper Tables 4-7)
+    predict, BSPMachine, CRAY_T3D — BSP (p, L, g) cost model (§1.1, Props 5.1/5.3)
+    datagen                       — §6.3 benchmark input distributions
+"""
+from .api import bsp_sort, bsp_sort_sharded, gathered_output, phase_fns, spmd_sort_fn
+from .bsp import BSPMachine, CRAY_T3D, Prediction, predict, theoretical_max_imbalance
+from .types import AXIS, SortConfig, SortResult, sentinel_for
+
+from . import datagen  # noqa: F401
+
+__all__ = [
+    "AXIS",
+    "BSPMachine",
+    "CRAY_T3D",
+    "Prediction",
+    "SortConfig",
+    "SortResult",
+    "bsp_sort",
+    "bsp_sort_sharded",
+    "datagen",
+    "gathered_output",
+    "phase_fns",
+    "predict",
+    "sentinel_for",
+    "spmd_sort_fn",
+    "theoretical_max_imbalance",
+]

@@ -1,0 +1,165 @@
+"""Public entry points for the BSP sorting library.
+
+Two runners share one SPMD implementation (verified equivalent in tests):
+
+* :func:`bsp_sort` — *simulated processors*: the global (p, n_per_proc)
+  layout is vmapped with an ``axis_name``, so JAX's collective batching rules
+  execute the exact same collective pattern on one device. This is how the
+  paper's Cray T3D experiments (p = 8..128) are reproduced on CPU.
+* :func:`bsp_sort_sharded` — *real devices*: the same SPMD function under
+  ``jax.shard_map`` over a mesh axis; used by the multi-pod dry-run, the MoE
+  dispatch layer, and the distributed tests.
+
+Phase-decomposed callables for the paper's Table 4-7 timing methodology are
+exposed via :func:`phase_fns`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from . import merge as merge_mod
+from . import routing, splitters
+from .bitonic import sort_bitonic_spmd
+from .local_sort import local_sort
+from .sort_det import sort_det_spmd
+from .sort_iran import sort_iran_spmd
+from .sort_ran import sort_ran_spmd
+from .types import AXIS, SortConfig, SortResult
+
+_ALGOS = {
+    "det": sort_det_spmd,
+    "iran": sort_iran_spmd,
+    "ran": sort_ran_spmd,
+    "bitonic": sort_bitonic_spmd,
+}
+
+
+def spmd_sort_fn(cfg: SortConfig) -> Callable:
+    """The per-processor SPMD sort body for ``cfg.algorithm``."""
+    cfg.validate()
+    return functools.partial(_ALGOS[cfg.algorithm], cfg=cfg)
+
+
+# ------------------------------------------------------------------ runners
+def bsp_sort(
+    x: jnp.ndarray,
+    cfg: Optional[SortConfig] = None,
+    *,
+    values: Sequence[jnp.ndarray] = (),
+    rng: Optional[jax.Array] = None,
+    **overrides,
+) -> SortResult:
+    """Sort a (p, n_per_proc) global array with simulated processors."""
+    p, n_p = x.shape
+    if cfg is None:
+        cfg = SortConfig(p=p, n_per_proc=n_p, **overrides)
+    assert (cfg.p, cfg.n_per_proc) == (p, n_p), "config/layout mismatch"
+    if rng is None:
+        rng = jax.random.key(cfg.seed)
+    fn = spmd_sort_fn(cfg)
+
+    def body(xk, vk):
+        buf, vbufs, count, overflow = fn(xk, axis=AXIS, values=vk, rng=rng)
+        return buf, vbufs, count, overflow
+
+    buf, vbufs, count, overflow = jax.vmap(body, axis_name=AXIS)(x, list(values))
+    return SortResult(buf=buf, count=count, overflow=overflow.any()), vbufs
+
+
+def bsp_sort_sharded(
+    x: jnp.ndarray,
+    mesh,
+    mesh_axis: str,
+    cfg: Optional[SortConfig] = None,
+    *,
+    values: Sequence[jnp.ndarray] = (),
+    rng: Optional[jax.Array] = None,
+    **overrides,
+) -> SortResult:
+    """Sort a (p, n_per_proc) array sharded over ``mesh_axis`` of ``mesh``."""
+    p, n_p = x.shape
+    if cfg is None:
+        cfg = SortConfig(p=p, n_per_proc=n_p, **overrides)
+    if rng is None:
+        rng = jax.random.key(cfg.seed)
+    fn = spmd_sort_fn(cfg)
+
+    def body(xk, *vk):
+        buf, vbufs, count, overflow = fn(
+            xk[0], axis=mesh_axis, values=[v[0] for v in vk], rng=rng
+        )
+        return (
+            buf[None],
+            tuple(v[None] for v in vbufs),
+            count[None],
+            overflow[None],
+        )
+
+    nv = len(values)
+    shmapped = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(mesh_axis),) * (1 + nv),
+        out_specs=(P(mesh_axis), (P(mesh_axis),) * nv, P(mesh_axis), P(mesh_axis)),
+        check_vma=False,
+    )
+    buf, vbufs, count, overflow = shmapped(x, *values)
+    return SortResult(buf=buf, count=count, overflow=overflow.any()), list(vbufs)
+
+
+def gathered_output(result: SortResult) -> np.ndarray:
+    """Host-side: concatenate valid prefixes into the full sorted sequence."""
+    buf = np.asarray(result.buf)
+    count = np.asarray(result.count)
+    return np.concatenate([buf[k, : count[k]] for k in range(buf.shape[0])])
+
+
+# ------------------------------------------------- phase-decomposed (bench)
+def phase_fns(cfg: SortConfig, rng: Optional[jax.Array] = None) -> Dict[str, Callable]:
+    """Separately-jittable phase functions over the global (p, n_p) layout.
+
+    Mirrors the paper's Ph2..Ph6 instrumentation (Tables 4-7). Each callable
+    consumes the previous phase's output so a benchmark can block between
+    phases. Only det/iran decompose; ran/bitonic are single calls.
+    """
+    cfg.validate()
+    if rng is None:
+        rng = jax.random.key(cfg.seed)
+
+    def vm(f):
+        return jax.jit(jax.vmap(f, axis_name=AXIS))
+
+    def ph2(x):
+        return local_sort(x, cfg.local_sort)[0]
+
+    def ph3(xs):
+        if cfg.algorithm == "det":
+            sample = splitters.regular_sample(xs, cfg, AXIS)
+        else:
+            sample = splitters.random_sample(xs, cfg, AXIS, rng)
+        return splitters.splitters_from_sorted_sample(cfg, sample, AXIS)
+
+    def ph4(xs, splits):
+        return splitters.searchsorted_tagged(xs, splits, AXIS)
+
+    def ph5(xs, bounds):
+        buf, _, count, overflow = routing.route(xs, bounds, cfg, AXIS)
+        return buf, count, overflow
+
+    def ph6(buf):
+        return merge_mod.merge_by_sort(buf)[0]
+
+    return {
+        "SeqSort": vm(ph2),
+        "Sampling": vm(ph3),
+        "Prefix": vm(ph4),
+        "Routing": vm(ph5),
+        "Merging": vm(ph6),
+    }

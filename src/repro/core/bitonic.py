@@ -1,0 +1,52 @@
+"""[BSI] — Batcher bitonic sort across processors (paper §6.2 item 3).
+
+Classic hypercube compare-split: after a local sort, lg p · (lg p + 1)/2
+supersteps; in each, partners (k, k XOR 2^j) exchange their n/p-key runs, one
+keeps the lower half of the merge, the other the upper half. Perfectly
+balanced (always exactly n/p keys per proc — no capacity machinery needed)
+but Θ(lg² p) routing rounds of g·(n/p) each, versus the sample-sort
+algorithms' single round: this is precisely the communication gap the paper's
+Table comparisons exhibit, and why [BSI] is used only for sample sorting.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from . import primitives as prim
+from .local_sort import local_sort
+from .types import SortConfig
+
+
+def _compare_split(xs: jnp.ndarray, other: jnp.ndarray, keep_low) -> jnp.ndarray:
+    n_p = xs.shape[0]
+    merged = jnp.sort(jnp.concatenate([xs, other]))
+    return jnp.where(keep_low, merged[:n_p], merged[n_p:])
+
+
+def sort_bitonic_spmd(
+    x: jnp.ndarray,
+    cfg: SortConfig,
+    axis: str,
+    values: Sequence[jnp.ndarray] = (),
+    rng=None,
+) -> Tuple[jnp.ndarray, List[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    del rng
+    if values:
+        raise NotImplementedError("[BSI] baseline is key-only")
+    p = cfg.p
+    lgp = int(math.log2(p))
+    me = prim.proc_id(axis)
+    xs, _ = local_sort(x, cfg.local_sort)
+    for i in range(lgp):
+        for j in range(i, -1, -1):
+            other = prim.exchange_with(xs, 1 << j, axis)
+            up = ((me >> (i + 1)) & 1) == 0
+            lower_half = ((me >> j) & 1) == 0
+            keep_low = jnp.equal(up, lower_half)
+            xs = _compare_split(xs, other, keep_low)
+    n_p = jnp.asarray(x.shape[0], jnp.int32)
+    return xs, [], n_p, jnp.zeros((), bool)

@@ -1,0 +1,128 @@
+"""Sorting benchmark input distributions (paper §6.3, after [39,40,41]).
+
+Seven generators producing the (p, n_per_proc) int32 global layout. The
+paper's [Z]/[RD] sets are omitted by the paper's own choice (§6.3: results
+match [DD]/[WR] and are never worse than [U]).
+
+INT_MAX = 2^31 (values in [0, 2^31 - 1], 32-bit signed — paper's setting).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+INT_MAX = 2**31
+
+
+def _rngs(p: int, seed: int):
+    # paper: processor i's seed is 21 + 1001*i
+    return [np.random.default_rng(seed + 21 + 1001 * i) for i in range(p)]
+
+
+def uniform(p: int, n_p: int, seed: int = 0) -> np.ndarray:
+    """[U] — uniform in [0, INT_MAX)."""
+    return np.stack([r.integers(0, INT_MAX, n_p, dtype=np.int64) for r in _rngs(p, seed)]).astype(np.int32)
+
+
+def gaussian(p: int, n_p: int, seed: int = 0) -> np.ndarray:
+    """[G] — mean of four uniform draws."""
+    out = []
+    for r in _rngs(p, seed):
+        out.append(sum(r.integers(0, INT_MAX, n_p, dtype=np.int64) for _ in range(4)) // 4)
+    return np.stack(out).astype(np.int32)
+
+
+def bucket_sorted(p: int, n_p: int, seed: int = 0) -> np.ndarray:
+    """[B] — per proc, p equal buckets; bucket i uniform in its 1/p range."""
+    w = INT_MAX // p
+    out = []
+    for r in _rngs(p, seed):
+        per = n_p // p
+        parts = [
+            r.integers(i * w, (i + 1) * w, per, dtype=np.int64) for i in range(p)
+        ]
+        rest = n_p - per * p
+        if rest:
+            parts.append(r.integers(0, INT_MAX, rest, dtype=np.int64))
+        out.append(np.concatenate(parts))
+    return np.stack(out).astype(np.int32)
+
+
+def g_group(p: int, n_p: int, seed: int = 0, g: int = 2) -> np.ndarray:
+    """[g-G] — procs in groups of g; bucket ranges rotated by jg + p/2 + i."""
+    w = INT_MAX // p
+    out = []
+    rngs = _rngs(p, seed)
+    for k in range(p):
+        j = k // g
+        per = n_p // g
+        parts = []
+        for i in range(g):
+            lo = ((j * g + p // 2 + i) % p) * w
+            parts.append(rngs[k].integers(lo, lo + w, per, dtype=np.int64))
+        rest = n_p - per * g
+        if rest:
+            parts.append(rngs[k].integers(0, INT_MAX, rest, dtype=np.int64))
+        out.append(np.concatenate(parts))
+    return np.stack(out).astype(np.int32)
+
+
+def staggered(p: int, n_p: int, seed: int = 0) -> np.ndarray:
+    """[S] — proc i<p/2 in range (2i+1)/p; proc i>=p/2 in range (i-p/2)/p."""
+    w = INT_MAX // p
+    out = []
+    rngs = _rngs(p, seed)
+    for i in range(p):
+        lo = ((2 * i + 1) * w) if i < p // 2 else ((i - p // 2) * w)
+        out.append(rngs[i].integers(lo, lo + w, n_p, dtype=np.int64))
+    return np.stack(out).astype(np.int32)
+
+
+def deterministic_duplicates(p: int, n_p: int, seed: int = 0) -> np.ndarray:
+    """[DD] — duplicates-heavy set after [39,40]: the first p/2 procs hold
+    lg n everywhere, the next p/4 procs lg(n/2), …; the last proc's run is
+    itself halved into runs of lg(n/p), lg(n/(2p)), …"""
+    n = p * n_p
+    lg = int(np.log2(max(n, 2)))
+    x = np.zeros((p, n_p), np.int32)
+    start, size, v = 0, max(p // 2, 1), lg
+    while start < p - 1 and size >= 1:
+        x[start : min(start + size, p - 1)] = v
+        start += size
+        size = max(size // 2, 1)
+        v = max(v - 1, 0)
+        if size == 1 and start >= p - 1:
+            break
+    # last processor: halving runs
+    off, run, v = 0, max(n_p // 2, 1), int(np.log2(max(n // p, 2)))
+    while off < n_p:
+        x[p - 1, off : off + run] = v
+        off += run
+        run = max(run // 2, 1)
+        v = max(v - 1, 0)
+    return x
+
+
+def worst_regular(p: int, n_p: int, seed: int = 0) -> np.ndarray:
+    """[WR] — worst case for plain regular sampling [39]: the sorted sequence
+    dealt cyclically, so every proc's evenly spaced sample is (nearly)
+    identical and un-oversampled splitters maximally misbalance buckets."""
+    n = p * n_p
+    scale = max(INT_MAX // max(n, 1), 1)
+    j = np.arange(n_p, dtype=np.int64)[None, :]
+    i = np.arange(p, dtype=np.int64)[:, None]
+    return ((j * p + i) * scale).astype(np.int32)
+
+
+DISTRIBUTIONS = {
+    "U": uniform,
+    "G": gaussian,
+    "B": bucket_sorted,
+    "2-G": g_group,
+    "S": staggered,
+    "DD": deterministic_duplicates,
+    "WR": worst_regular,
+}
+
+
+def generate(name: str, p: int, n_p: int, seed: int = 0) -> np.ndarray:
+    return DISTRIBUTIONS[name](p, n_p, seed)

@@ -1,0 +1,94 @@
+"""Ph6 — stable multi-way merging of the routed buckets (Fig. 1 step 12).
+
+Knuth's heap-based p-way merge (the paper's n_max·lg p charge) is scalar and
+branchy; the TPU-native counterparts are:
+
+* ``sort``  — one stable re-sort of the capacity buffer. The routed buffer is
+  already ordered by (source proc, local idx), so a *stable* key sort yields
+  exactly the paper's stable merge semantics; under XLA this is one fused
+  O(n_max lg² n_max) sorting network, usually fastest in practice.
+* ``tree``  — lg p rounds of pairwise *rank merges*: each element's output
+  position is ``own_idx + rank_in_other`` (searchsorted), stability by taking
+  left-run elements first on ties. Work O(n_max·lg n_max·?) per round but
+  each round is a fully vectorized gather/scatter — this honours the paper's
+  merge-not-sort structure and is exposed for §Perf comparison.
+
+Both keep pads (key == sentinel) at the tail by construction.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .types import sentinel_for
+
+
+def merge_by_sort(
+    buf: jnp.ndarray, values: Sequence[jnp.ndarray] = ()
+) -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
+    """Stable re-sort of the (cap,) buffer (+ payload), pads stay at tail."""
+    if not values:
+        out = lax.sort((buf,), num_keys=1, is_stable=True)
+        return out[0], []
+    flat_vals = []
+    shapes = []
+    for v in values:
+        shapes.append(v.shape)
+        flat_vals.append(v.reshape(v.shape[0], -1) if v.ndim > 1 else v)
+    # lax.sort wants equal-shape operands along the sort dim; multi-dim
+    # payloads are sorted via gathered permutation instead.
+    perm = jnp.argsort(buf, stable=True)
+    out_vals = [v[perm].reshape(s) for v, s in zip(values, shapes)]
+    return buf[perm], out_vals
+
+
+def _rank_merge_two(
+    ka: jnp.ndarray,
+    ca: jnp.ndarray,
+    kb: jnp.ndarray,
+    cb: jnp.ndarray,
+    sent: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable merge of two sorted padded runs -> (2w,) run + count.
+
+    pos_a(i) = i + #{j < cb : b_j <  a_i}   (left run first on ties)
+    pos_b(j) = j + #{i < ca : a_i <= b_j}
+    Invalid (padded) entries are routed to unique tail slots.
+    """
+    wa, wb = ka.shape[0], kb.shape[0]
+    ra = jnp.minimum(jnp.searchsorted(kb, ka, side="left"), cb)
+    rb = jnp.minimum(jnp.searchsorted(ka, kb, side="right"), ca)
+    ia, ib = jnp.arange(wa), jnp.arange(wb)
+    pos_a = jnp.where(ia < ca, ia + ra, ca + cb + ia)
+    pos_b = jnp.where(ib < cb, ib + rb, ca + cb + wa + ib)
+    out = jnp.full((wa + wb,), sent, ka.dtype)
+    out = out.at[jnp.clip(pos_a, 0, wa + wb - 1)].set(
+        jnp.where(ia < ca, ka, sent), mode="drop"
+    )
+    out = out.at[jnp.clip(pos_b, 0, wa + wb - 1)].set(
+        jnp.where(ib < cb, kb, sent), mode="drop"
+    )
+    return out, ca + cb
+
+
+def merge_tree(
+    runs: jnp.ndarray, counts: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge (m, w) sorted padded runs (m a power of two) into one run.
+
+    lg m rounds of vmapped pairwise rank merges; returns ((m·w,), count).
+    """
+    sent = sentinel_for(runs.dtype)
+    m = runs.shape[0]
+    assert m & (m - 1) == 0, "run count must be a power of two"
+    while m > 1:
+        a, b = runs[0::2], runs[1::2]
+        ca, cb = counts[0::2], counts[1::2]
+        runs, counts = jax.vmap(
+            lambda ka, ca, kb, cb: _rank_merge_two(ka, ca, kb, cb, sent)
+        )(a, ca, b, cb)
+        m //= 2
+    return runs[0], counts[0]

@@ -1,0 +1,216 @@
+"""Key routing (Fig. 1 steps 10-11) — the single balanced h-relation.
+
+On the Cray T3D this superstep is a ragged BSPlib ``bsp_put`` h-relation of
+cost g·n_max. XLA collectives are fixed-shape, so we rely on the paper's own
+theory to make the port sound: Lemma 5.1 (det) / Claim 5.1 (randomized) bound
+the receive side at compile time, giving a static capacity ``cap = n_max``.
+
+Three schedules (DESIGN.md §3):
+
+* ``a2a_dense`` — one ``lax.all_to_all`` over a (p, pair_cap) send buffer.
+  ``pair_cap`` is per-(src,dst): ``exact`` mode uses n/p (distribution
+  independent — an adversarial input can aim a whole local run at one
+  bucket); ``whp`` mode uses the Chernoff-scale (n/p²)(1+1/ω)+ω·p bound that
+  holds w.h.p. for the randomized algorithm — overflow is *detected* (pmax of
+  counts) and surfaced as a retriable fault, since a sort may not drop keys.
+* ``allgather`` — reference schedule; every proc gathers all runs and slices
+  its bucket. Volume g·n but one superstep and always exact.
+* ``ring`` — p-1 ``ppermute`` supersteps rotating an n/p-word visitor block;
+  exact, memory O(n/p), the literal BSP superstep structure.
+
+All schedules preserve source order: the receive buffer is compacted by
+(source proc, local index), which is what makes the final merge stable and
+the §5.1.1 duplicate handling free.
+
+Values (payload arrays with leading dim n_p) ride along with the keys — this
+is the key-value form used by MoE token dispatch (models/moe.py).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from . import primitives as prim
+from .types import SortConfig, sentinel_for
+
+
+def _pad_value_for(arr: jnp.ndarray) -> jnp.ndarray:
+    return jnp.zeros((), arr.dtype)
+
+
+def send_counts(boundaries: jnp.ndarray) -> jnp.ndarray:
+    """(p,) keys this proc sends to each destination."""
+    return jnp.diff(boundaries)
+
+
+def recv_counts(counts: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Transpose the (implicit) p×p count matrix: r[j] = counts_on_proc_j[me].
+
+    One all_to_all of p words — the Ph4 prefix bookkeeping superstep.
+    """
+    return lax.all_to_all(counts.reshape(-1, 1), axis, 0, 0).reshape(-1)
+
+
+def _segment_rows(
+    arrs: Sequence[jnp.ndarray],
+    boundaries: jnp.ndarray,
+    counts: jnp.ndarray,
+    width: int,
+    key_sentinel: jnp.ndarray,
+) -> List[jnp.ndarray]:
+    """Slice the local run into p destination rows of static width.
+
+    rows[i, t] = arr[b[i] + t] for t < c_i else pad — one gather per array.
+    """
+    n_p = arrs[0].shape[0]
+    t = jnp.arange(width)[None, :]
+    idx = jnp.clip(boundaries[:-1][:, None] + t, 0, n_p - 1)
+    valid = t < counts[:, None]
+    rows = []
+    for i, a in enumerate(arrs):
+        g = a[idx]  # (p, width, ...)
+        fill = key_sentinel if i == 0 else _pad_value_for(a)
+        mask = valid.reshape(valid.shape + (1,) * (g.ndim - 2))
+        rows.append(jnp.where(mask, g, fill))
+    return rows
+
+
+def recv_rows(
+    x_sorted: jnp.ndarray,
+    boundaries: jnp.ndarray,
+    cfg: SortConfig,
+    axis: str,
+    values: Sequence[jnp.ndarray] = (),
+) -> Tuple[List[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    """Deliver bucket ``me`` of every source as padded rows.
+
+    Returns ``(rows, rcounts, overflow)`` where rows[a] has shape
+    (p, width, ...): row j = the run received from source j (sorted, padded),
+    rcounts[j] its valid length. Width = pair_cap (a2a_dense) or n_p
+    (allgather).
+    """
+    sent = sentinel_for(x_sorted.dtype)
+    counts = send_counts(boundaries)
+    arrs = [x_sorted, *values]
+
+    if cfg.routing == "a2a_dense":
+        pair_cap = cfg.pair_cap
+        rcounts = recv_counts(counts, axis)
+        over = (jnp.any(counts > pair_cap) | (rcounts.sum() > cfg.n_max)).astype(
+            jnp.int32
+        )
+        overflow = lax.pmax(over, axis) > 0
+        rows = _segment_rows(arrs, boundaries, counts, pair_cap, sent)
+        rows = [lax.all_to_all(r, axis, 0, 0) for r in rows]
+        return rows, rcounts, overflow
+
+    if cfg.routing == "allgather":
+        me = prim.proc_id(axis)
+        b_all = lax.all_gather(boundaries, axis)  # (p, p+1)
+        starts = b_all[:, me]
+        rcounts = b_all[:, me + 1] - starts
+        n_p = x_sorted.shape[0]
+        t = jnp.arange(n_p)[None, :]
+        idx = jnp.clip(starts[:, None] + t, 0, n_p - 1)
+        valid = t < rcounts[:, None]
+        rows = []
+        for i, a in enumerate(arrs):
+            a_all = lax.all_gather(a, axis)  # (p, n_p, ...)
+            g = jnp.take_along_axis(
+                a_all, idx.reshape(idx.shape + (1,) * (a_all.ndim - 2)), axis=1
+            )
+            fill = sent if i == 0 else _pad_value_for(a)
+            mask = valid.reshape(valid.shape + (1,) * (g.ndim - 2))
+            rows.append(jnp.where(mask, g, fill))
+        over = (rcounts.sum() > cfg.n_max).astype(jnp.int32)
+        overflow = lax.pmax(over, axis) > 0
+        return rows, rcounts, overflow
+
+    raise ValueError(f"recv_rows: unsupported routing {cfg.routing!r}")
+
+
+def compact_rows(
+    rows: Sequence[jnp.ndarray],
+    rcounts: jnp.ndarray,
+    cap: int,
+    key_sentinel: jnp.ndarray,
+) -> List[jnp.ndarray]:
+    """Scatter (p, w, ...) rows into a (cap, ...) buffer ordered by source.
+
+    Row j's first r_j entries land at offsets[j]..; the rest are dropped
+    (index == cap with mode='drop'). Pads end at the tail.
+    """
+    offsets = prim.exclusive_cumsum(rcounts)
+    p, w = rows[0].shape[:2]
+    t = jnp.arange(w)[None, :]
+    valid = t < rcounts[:, None]
+    idx = jnp.where(valid, offsets[:, None] + t, cap).reshape(-1)
+    out = []
+    for i, r in enumerate(rows):
+        fill = key_sentinel if i == 0 else _pad_value_for(r)
+        buf = jnp.full((cap,) + r.shape[2:], fill, r.dtype)
+        out.append(buf.at[idx].set(r.reshape((p * w,) + r.shape[2:]), mode="drop"))
+    return out
+
+
+def route(
+    x_sorted: jnp.ndarray,
+    boundaries: jnp.ndarray,
+    cfg: SortConfig,
+    axis: str,
+    values: Sequence[jnp.ndarray] = (),
+) -> Tuple[jnp.ndarray, List[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    """Route bucket i of every proc to proc i, compacted by source.
+
+    Returns ``(buf, value_bufs, count, overflow)``: the (cap,) receive buffer
+    ordered by (src, idx), its valid prefix length, and the capacity fault
+    flag (retriable — the driver re-runs with the next capacity tier).
+    """
+    sent = sentinel_for(x_sorted.dtype)
+    cap = cfg.n_max
+
+    if cfg.routing == "ring":
+        return _route_ring(x_sorted, boundaries, cfg, axis, values, sent)
+
+    rows, rcounts, overflow = recv_rows(x_sorted, boundaries, cfg, axis, values)
+    out = compact_rows(rows, rcounts, cap, sent)
+    total = jnp.minimum(rcounts.sum(), cap)
+    return out[0], out[1:], total, overflow
+
+
+def _route_ring(x_sorted, boundaries, cfg, axis, values, sent):
+    """p-1 ppermute supersteps; visitor block = one local run + boundaries."""
+    p, cap = cfg.p, cfg.n_max
+    n_p = x_sorted.shape[0]
+    me = prim.proc_id(axis)
+    arrs = [x_sorted, *values]
+
+    counts = send_counts(boundaries)
+    rcounts = recv_counts(counts, axis)
+    offsets = prim.exclusive_cumsum(rcounts)
+    total = rcounts.sum()
+    overflow = lax.pmax((total > cap).astype(jnp.int32), axis) > 0
+
+    bufs = []
+    for i, a in enumerate(arrs):
+        fill = sent if i == 0 else _pad_value_for(a)
+        bufs.append(jnp.full((cap,) + a.shape[1:], fill, a.dtype))
+
+    vis_arrs, vis_b = tuple(arrs), boundaries
+    for r in range(p):  # r=0 places the local segment; then p-1 rotations
+        src = (me - r) % p
+        start = vis_b[me]
+        cnt = vis_b[me + 1] - start
+        t = jnp.arange(n_p)
+        idx = jnp.clip(start + t, 0, n_p - 1)
+        valid = t < cnt
+        dst = jnp.where(valid, offsets[src] + t, cap)
+        bufs = [
+            buf.at[dst].set(a[idx], mode="drop") for buf, a in zip(bufs, vis_arrs)
+        ]
+        if r != p - 1:
+            vis_arrs = prim.ppermute_shift(vis_arrs, axis, 1)
+            vis_b = prim.ppermute_shift(vis_b, axis, 1)
+    return bufs[0], bufs[1:], jnp.minimum(total, cap), overflow

@@ -1,0 +1,50 @@
+"""SORT_DET_BSP (Fig. 1) — deterministic regular-oversampling sample sort.
+
+Phases (paper Tables 4-7 naming):
+  Ph2 SeqSort  — stable local sort of the n/p-key run;
+  Ph3 Sampling — regular oversampling (s = ⌈ω⌉·p evenly spaced keys + max),
+                 parallel sample sort, splitter selection + broadcast;
+  Ph4 Prefix   — tagged binary-search partition + count bookkeeping;
+  Ph5 Routing  — the single balanced h-relation (cap = Lemma 5.1's n_max);
+  Ph6 Merging  — stable multi-way merge of the received sorted runs.
+
+Duplicate keys are handled transparently per §5.1.1: only the o(n) sample /
+splitter records carry (proc, idx) tags; the partition comparator and every
+sort/merge are stable, so the output is the stable sort of the input even
+when *all* keys are equal — with no doubling of computation or communication.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import merge as merge_mod
+from . import routing, splitters
+from .local_sort import local_sort
+from .types import SortConfig, sentinel_for
+
+
+def sort_det_spmd(
+    x: jnp.ndarray,
+    cfg: SortConfig,
+    axis: str,
+    values: Sequence[jnp.ndarray] = (),
+    rng: jax.Array | None = None,  # unused; uniform signature with iran
+) -> Tuple[jnp.ndarray, List[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    del rng
+    xs, vals = local_sort(x, cfg.local_sort, values)  # Ph2
+    sample = splitters.regular_sample(xs, cfg, axis)  # Ph3
+    splits = splitters.splitters_from_sorted_sample(cfg, sample, axis)
+    bounds = splitters.searchsorted_tagged(xs, splits, axis)  # Ph4
+
+    if cfg.merge == "tree" and not vals and cfg.routing != "ring":
+        rows, rcounts, overflow = routing.recv_rows(xs, bounds, cfg, axis, vals)
+        merged, count = merge_mod.merge_tree(rows[0], rcounts)
+        merged = merged[: cfg.n_max]
+        return merged, [], jnp.minimum(count, cfg.n_max), overflow
+
+    buf, vbufs, count, overflow = routing.route(xs, bounds, cfg, axis, vals)  # Ph5
+    merged, mvals = merge_mod.merge_by_sort(buf, vbufs)  # Ph6
+    return merged, mvals, count, overflow

@@ -1,0 +1,175 @@
+"""Core datatypes and layout conventions for the BSP sorting library.
+
+Layout conventions
+------------------
+A *distributed sequence* of ``n = p * n_per_proc`` keys is represented as:
+
+* global layout: an array of shape ``(p, n_per_proc)`` (row k = processor k's
+  local run, mirroring the paper's ``X^<k>`` notation);
+* SPMD layout (inside an ``axis_name`` region): a local array ``(n_per_proc,)``.
+
+Phase outputs that are variable-sized in the paper (the routed buckets, the
+merged result) are *capacity-padded*: a pair ``(buf, count)`` where
+``buf[:count]`` holds valid keys and ``buf[count:]`` holds the dtype sentinel.
+The capacity is the paper's deterministic receive bound (Lemma 5.1) for the
+deterministic algorithm and the Claim 5.1 w.h.p. bound for the randomized
+algorithm — this static bound is exactly what makes the BSP h-relation
+expressible as fixed-shape XLA collectives (see DESIGN.md §3).
+
+Stability/padding invariant
+---------------------------
+Pads always occupy a suffix of every buffer, every sort is stable
+(``lax.sort(..., is_stable=True)``), and routing/merging preserve
+(source processor, local index) order for equal keys. Hence ``buf[:count]``
+is exact even when real keys equal the sentinel value, and the paper's
+transparent duplicate handling (§5.1.1) carries over with only the o(n)
+sample/splitter tagging.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+#: Default collective axis name used by the simulated (vmap) runner.
+AXIS = "bsp"
+
+
+def sentinel_for(dtype) -> jnp.ndarray:
+    """Largest representable value of ``dtype`` — used as tail padding."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def log2(x: float) -> float:
+    return math.log2(max(x, 2.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class SortConfig:
+    """Static configuration of one BSP sort instance.
+
+    Mirrors the tunables of the paper's implementations:
+
+    * ``omega`` — the oversampling regulator ω_n. Paper defaults (§6.1):
+      deterministic ω_n = lg lg n, randomized ω_n = sqrt(lg n).
+    * ``local_sort`` — Ph2 sequential method: ``lax`` (stable comparison sort —
+      the [·SQ]/quicksort variants), ``radix`` (counting-split — the [·SR]
+      variants), or ``bitonic`` (Pallas in-VMEM sorting network).
+    * ``merge`` — Ph6 method: ``sort`` (stable re-sort of the routed buffer)
+      or ``tree`` (lg p rounds of stable pairwise rank-merges).
+    * ``routing`` — Ph5 schedule: ``a2a_dense`` (single all_to_all over a
+      (p, pair_cap) buffer), ``allgather`` (reference; g·n volume), or
+      ``ring`` (p-1 ppermute supersteps, n_per_proc-sized visitor buffer).
+    * ``sample_sort`` — Ph3 parallel sample sorting: ``gather`` (all_gather +
+      fused local sort; optimal when p·s fits one core) or ``bitonic``
+      (distributed Batcher compare-split, the paper's [BSI]-based scheme).
+    """
+
+    p: int
+    n_per_proc: int
+    algorithm: str = "det"  # det | iran | ran | bitonic
+    omega: Optional[float] = None
+    local_sort: str = "lax"
+    merge: str = "sort"
+    routing: str = "a2a_dense"
+    sample_sort: str = "gather"
+    capacity_factor: float = 1.0
+    pad_align: int = 8
+    # pair capacity mode for a2a_dense: "exact" (= n_per_proc, distribution
+    # independent) or "whp" (Chernoff-scale n/p^2 bound; production setting,
+    # overflow detected & surfaced as a retriable fault).
+    pair_capacity: str = "exact"
+    seed: int = 0
+
+    # ------------------------------------------------------------------ math
+    @property
+    def n(self) -> int:
+        return self.p * self.n_per_proc
+
+    @property
+    def omega_eff(self) -> float:
+        if self.omega is not None:
+            return float(self.omega)
+        if self.algorithm == "det":
+            # paper §6.1: omega_n = lg lg n
+            return max(1.0, math.ceil(log2(log2(self.n))))
+        # randomized: omega_n^2 = lg n
+        return max(1.0, math.sqrt(log2(self.n)))
+
+    @property
+    def r(self) -> int:
+        """⌈ω_n⌉ — regular-oversampling ratio (deterministic algorithm)."""
+        return max(1, math.ceil(self.omega_eff))
+
+    @property
+    def s(self) -> int:
+        """Per-processor sample size.
+
+        det: s = ⌈ω_n⌉·p (rp-1 evenly spaced keys + the local max, Fig. 1
+        step 4). iran/ran: s = 2·ω_n²·lg n (Fig. 2/3 step 1).
+        """
+        if self.algorithm == "det":
+            return self.r * self.p
+        return max(2, int(2 * self.omega_eff**2 * log2(self.n)))
+
+    @property
+    def segment_len(self) -> int:
+        """x = ⌈⌈n/p⌉ / s⌉ — regular sample segment length (Lemma 5.1 proof)."""
+        return -(-self.n_per_proc // self.s)
+
+    @property
+    def n_max(self) -> int:
+        """Receive-side bound per processor.
+
+        det: exact bound from the Lemma 5.1 proof, b_{i+1}-b_i ≤ (s+p-1)·x
+        (equivalently (1+1/⌈ω⌉)·n/p + ⌈ω⌉·p up to padding).
+        iran/ran: Claim 5.1 w.h.p. bound (1+1/ω)·n/p, plus an ω·p slack term
+        absorbing splitter granularity.
+        """
+        if self.algorithm == "det":
+            bound = (self.s + self.p - 1) * self.segment_len
+        else:
+            bound = int((1.0 + 1.0 / self.omega_eff) * self.n_per_proc) + int(
+                self.omega_eff * self.p
+            )
+        bound = int(math.ceil(bound * self.capacity_factor))
+        return min(round_up(bound, self.pad_align), max(self.n, self.pad_align))
+
+    @property
+    def pair_cap(self) -> int:
+        """Per-(src,dst) capacity for the dense all_to_all schedule."""
+        if self.pair_capacity == "exact":
+            return round_up(self.n_per_proc, self.pad_align)
+        # w.h.p. bound: n/p^2 bucket share, (1+1/ω) expansion, +ω·p slack.
+        cap = int(
+            (1.0 + 1.0 / self.omega_eff) * (self.n_per_proc / self.p)
+            + self.omega_eff * self.p
+        )
+        cap = int(math.ceil(cap * self.capacity_factor))
+        return min(round_up(max(cap, self.pad_align), self.pad_align), round_up(self.n_per_proc, self.pad_align))
+
+    def validate(self) -> None:
+        if self.p & (self.p - 1):
+            raise ValueError(f"p must be a power of two for bitonic stages, got {self.p}")
+        if self.algorithm not in ("det", "iran", "ran", "bitonic"):
+            raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if self.n_per_proc < 1:
+            raise ValueError("n_per_proc must be >= 1")
+
+
+@dataclasses.dataclass
+class SortResult:
+    """Per-processor capacity-padded result of a distributed sort."""
+
+    buf: jnp.ndarray  # (p, cap) global layout or (cap,) SPMD layout
+    count: jnp.ndarray  # (p,) or scalar — valid prefix length
+    overflow: jnp.ndarray  # bool — any capacity violated (retriable fault)

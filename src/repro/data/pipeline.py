@@ -1,0 +1,73 @@
+"""Data pipeline: stateless-seeded synthetic LM batches + BSP-sort bucketing.
+
+* ``synthetic_batch(cfg, shape, step)`` — deterministic (step → batch), so a
+  restart from checkpoint replays the exact stream (fault-tolerance
+  contract with train/checkpoint.py).
+* ``length_bucketed_order`` — global length-bucketing of a corpus of
+  variable-length documents via the paper's distributed sort: keys =
+  document lengths, payload = doc ids (SORT_IRAN_BSP, key-value form). This
+  is the paper's technique as the data-layer feature: one balanced
+  communication round replaces a gather-sort-scatter shuffle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import SortConfig, bsp_sort
+from repro.models.layers import dtype_of
+
+
+def synthetic_batch(
+    cfg: ArchConfig, shape: ShapeConfig, step: int, *, batch_override: Optional[int] = None
+) -> Dict[str, jnp.ndarray]:
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    rng = jax.random.key(step)
+    tokens = jax.random.randint(rng, (b, s), 0, cfg.vocab, dtype=jnp.int32)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.zeros(
+            (b, cfg.vision_tokens, cfg.d_model), dtype_of(cfg)
+        )
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(rng, 1), (b, cfg.enc_positions, cfg.d_model)
+        ).astype(dtype_of(cfg))
+    return batch
+
+
+def length_bucketed_order(
+    doc_lengths: np.ndarray, p: int, *, algorithm: str = "iran", seed: int = 0
+) -> np.ndarray:
+    """Return doc ids in globally length-sorted order using the BSP sort.
+
+    ``doc_lengths``: (n,) int32. The corpus is dealt to ``p`` simulated
+    processors, sorted by (length) with doc-id payload, and the
+    concatenated valid prefixes give the bucketing order — equal lengths
+    keep corpus order (stability = deterministic batch composition).
+    """
+    n = doc_lengths.shape[0]
+    n_p = -(-n // p)
+    pad = p * n_p - n
+    lengths = np.concatenate([doc_lengths, np.full(pad, np.iinfo(np.int32).max)])
+    ids = np.concatenate([np.arange(n, dtype=np.int32), np.full(pad, -1, np.int32)])
+    res, vals = bsp_sort(
+        jnp.asarray(lengths.reshape(p, n_p)),
+        algorithm=algorithm,
+        values=(jnp.asarray(ids.reshape(p, n_p)),),
+        seed=seed,
+    )
+    buf = np.asarray(vals[0])
+    cnt = np.asarray(res.count)
+    order = np.concatenate([buf[k, : cnt[k]] for k in range(p)])
+    return order[order >= 0]
+
+
+def batches_for_run(cfg: ArchConfig, shape: ShapeConfig, start_step: int, n_steps: int):
+    for step in range(start_step, start_step + n_steps):
+        yield step, synthetic_batch(cfg, shape, step)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the bitonic kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sort(x: jnp.ndarray) -> jnp.ndarray:
+    """Rowwise sort along the last axis."""
+    return jnp.sort(x, axis=-1)
+
+
+def sort_kv(keys: jnp.ndarray, vals: jnp.ndarray):
+    """Rowwise key-value sort (ties may be permuted — bitonic is unstable,
+    so oracles compare (key, value) pairs as multisets per row)."""
+    order = jnp.argsort(keys, axis=-1, stable=True)
+    return jnp.take_along_axis(keys, order, -1), jnp.take_along_axis(vals, order, -1)
+
+
+def merge(x: jnp.ndarray) -> jnp.ndarray:
+    """Merge of an (ascending ++ descending) bitonic row = full sort."""
+    return jnp.sort(x, axis=-1)

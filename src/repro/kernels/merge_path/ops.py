@@ -1,0 +1,38 @@
+"""jit'd public wrapper for the merge kernel (padding + CPU interpret)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import sentinel_for
+
+from . import kernel
+
+MAX_WIDTH = 8192
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pow2_at_least(n: int, floor: int = 128) -> int:
+    w = floor
+    while w < n:
+        w *= 2
+    return w
+
+
+@jax.jit
+def merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Merge sorted rows of a and b; returns sorted (rows, na+nb)."""
+    squeeze = a.ndim == 1
+    if squeeze:
+        a, b = a[None, :], b[None, :]
+    rows, na = a.shape
+    _, nb = b.shape
+    sent = sentinel_for(a.dtype)
+    w = _pow2_at_least(max(na, nb))
+    ap = jnp.pad(a, ((0, 0), (0, w - na)), constant_values=sent)
+    bp = jnp.pad(b, ((0, 0), (0, w - nb)), constant_values=sent)
+    out = kernel.merge_sorted_tiles(ap, bp, interpret=_interpret())[:, : na + nb]
+    return out[0] if squeeze else out

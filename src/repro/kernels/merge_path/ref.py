@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the merge kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Rowwise merge of two sorted arrays = sort of their concatenation."""
+    return jnp.sort(jnp.concatenate([a, b], axis=-1), axis=-1)

@@ -1,0 +1,86 @@
+"""Splitter-rank computation — Pallas TPU kernel (the paper's Ph4 partition).
+
+Given a sorted run and p-1 (tagged) splitters, compute each splitter's rank,
+i.e. the bucket boundaries of Fig. 1 step 9. A scalar binary search is a
+gather-heavy pattern; the TPU-idiomatic formulation is a *masked count*:
+
+    rank(q) = Σ_i [ (x_i, me, i) <  (q_key, q_proc, q_idx) ]
+
+evaluated as a broadcast lexicographic compare of a (block,) data tile
+against the (S,) splitter vector, reduced over the grid. O(n·S) vector work
+replaces O(S·lg n) scalar work — the classic network-vs-scalar TPU trade,
+and S = p-1 is small. The tagged comparator is §5.1.1's duplicate handling.
+
+Grid iterates over data blocks; the output (1, S) rank block is revisited
+every step and accumulated in place (init at step 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ranks_kernel(x_ref, sk_ref, sp_ref, si_ref, me_ref, o_ref, *, block: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (1, block)
+    base = step * block
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    me = me_ref[0, 0]
+    sk, sp, si = sk_ref[...], sp_ref[...], si_ref[...]  # (1, S)
+    # lexicographic (key, proc, idx) < (splitter key, proc, idx)
+    xk = x[:, :, None]  # (1, block, 1)
+    xi = idx[:, :, None]
+    qk, qp, qi = sk[:, None, :], sp[:, None, :], si[:, None, :]  # (1, 1, S)
+    less = (xk < qk) | ((xk == qk) & ((me < qp) | ((me == qp) & (xi < qi))))
+    o_ref[...] += jnp.sum(less.astype(jnp.int32), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def splitter_ranks(
+    x_sorted: jnp.ndarray,
+    split_keys: jnp.ndarray,
+    split_proc: jnp.ndarray,
+    split_idx: jnp.ndarray,
+    me: jnp.ndarray,
+    *,
+    block: int = 2048,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Ranks of S tagged splitters in the local sorted run (n,) -> (S,) int32.
+
+    Caller pads n to a multiple of ``block`` with the dtype sentinel; pad
+    elements compare greater-or-equal to every real splitter, so they never
+    contribute to a rank (their implicit idx also exceeds every tag).
+    """
+    n = x_sorted.shape[0]
+    s = split_keys.shape[0]
+    assert n % block == 0, "pad the run to a multiple of the block size"
+    grid = (n // block,)
+    return pl.pallas_call(
+        functools.partial(_ranks_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, s), lambda i: (0, 0)),
+            pl.BlockSpec((1, s), lambda i: (0, 0)),
+            pl.BlockSpec((1, s), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, s), jnp.int32),
+        interpret=interpret,
+    )(
+        x_sorted[None, :],
+        split_keys[None, :],
+        split_proc[None, :],
+        split_idx[None, :],
+        me.reshape(1, 1),
+    )[0]

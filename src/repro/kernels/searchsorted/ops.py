@@ -1,0 +1,38 @@
+"""jit'd public wrapper for the splitter-rank kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import round_up, sentinel_for
+
+from . import kernel
+
+BLOCK = 2048
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@jax.jit
+def splitter_ranks(x_sorted, split_keys, split_proc, split_idx, me):
+    """Bucket boundaries (S,) of tagged splitters in a sorted (n,) run."""
+    n = x_sorted.shape[0]
+    block = min(BLOCK, round_up(n, 128))
+    npad = round_up(n, block)
+    sent = sentinel_for(x_sorted.dtype)
+    xp = jnp.pad(x_sorted, (0, npad - n), constant_values=sent)
+    ranks = kernel.splitter_ranks(
+        xp,
+        split_keys,
+        split_proc.astype(jnp.int32),
+        split_idx.astype(jnp.int32),
+        jnp.asarray(me, jnp.int32),
+        block=block,
+        interpret=_interpret(),
+    )
+    # pad elements carry idx ≥ n; a real splitter can still tag idx ≥ n only
+    # on its own (proc, idx) record, never here — but a padded x equal to a
+    # splitter key with me<proc would count. Clamp to n for safety.
+    return jnp.minimum(ranks, n)

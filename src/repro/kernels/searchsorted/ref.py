@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the splitter-rank kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def splitter_ranks(x_sorted, split_keys, split_proc, split_idx, me):
+    """rank(q) = #{i : (x_i, me, i) < (q_key, q_proc, q_idx)} — dense count."""
+    n = x_sorted.shape[0]
+    i = jnp.arange(n, dtype=jnp.int32)[:, None]
+    xk = x_sorted[:, None]
+    qk, qp, qi = split_keys[None, :], split_proc[None, :], split_idx[None, :]
+    less = (xk < qk) | ((xk == qk) & ((me < qp) | ((me == qp) & (i < qi))))
+    return jnp.sum(less.astype(jnp.int32), axis=0)

@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init). 512 placeholder CPU devices stand in for 2 pods × 256
+v5e chips; the compile proves the distribution config is coherent — sharding
+mismatches, compile-time OOM and unsupported collectives all fail here.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Per cell this records: compile wall-time, per-device memory analysis,
+cost_analysis (FLOPs / bytes), and the collective-bytes breakdown parsed
+from the post-SPMD HLO — the §Roofline inputs.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import SHAPES, all_archs, get_arch  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_decode_step, make_prefill_step  # noqa: E402
+from repro.models import Model  # noqa: E402
+from repro.optim import OptConfig  # noqa: E402
+from repro.roofline.analysis import analyze_compiled  # noqa: E402
+from repro.train import make_train_step  # noqa: E402
+
+
+def opt_shapes(params_shapes, opt_cfg: OptConfig):
+    dt = jnp.dtype(opt_cfg.state_dtype)
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {
+        "m": jax.tree.map(z, params_shapes),
+        "v": jax.tree.map(z, params_shapes),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def opt_config_for(cfg) -> OptConfig:
+    # >100B params: bf16 optimizer state to fit the 16 GB/chip budget
+    big = cfg.param_count() > 1e11
+    return OptConfig(
+        state_dtype="bfloat16" if big else "float32",
+        grad_accum_dtype="bfloat16" if big else "float32",
+    )
+
+
+def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool):
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    runnable, reason = cfg.runnable(shape)
+    if not runnable:
+        return {"status": "skipped", "reason": reason}
+    if shape.kind != "train" and cfg.param_sharding == "dp":
+        # the pure-DP training policy (§Perf A2) is wrong for serving
+        # (batch ≤ 32): serve with TP weights instead.
+        cfg = dataclasses.replace(cfg, param_sharding="1d")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    pshapes = model.param_shapes()
+
+    if shape.kind == "train":
+        ocfg = opt_config_for(cfg)
+        batch = model.input_specs(shape)
+        fn = make_train_step(model, ocfg, mesh, batch_shapes=batch)
+        args = (pshapes, opt_shapes(pshapes, ocfg), batch)
+    elif shape.kind == "prefill":
+        batch = model.input_specs(shape)
+        fn = make_prefill_step(
+            model, mesh, cache_len=shape.seq_len, batch_shapes=batch
+        )
+        args = (pshapes, batch)
+    else:  # decode
+        specs = model.input_specs(shape)
+        fn = make_decode_step(
+            model, mesh, batch=shape.global_batch, cache_len=shape.seq_len
+        )
+        args = (pshapes, specs["cache"], specs["token"])
+
+    t0 = time.time()
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    info = analyze_compiled(compiled, mesh=mesh, cfg=cfg, shape=shape)
+    info.update(
+        {
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+        }
+    )
+    return info
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(
+        f"mesh: {dict(mesh.shape)} over {len(jax.devices())} host devices "
+        f"({'multi-pod' if args.multi_pod else 'single-pod'})"
+    )
+
+    cells = []
+    if args.all:
+        for a in all_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    results = {}
+    for arch_name, shape_name in cells:
+        key = f"{arch_name}|{shape_name}|{'2x16x16' if args.multi_pod else '16x16'}"
+        print(f"=== {key} ===", flush=True)
+        try:
+            info = lower_cell(arch_name, shape_name, multi_pod=args.multi_pod)
+        except Exception as e:  # a dry-run failure is a bug in our system
+            info = {
+                "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:],
+            }
+        results[key] = info
+        for k, v in info.items():
+            if k not in ("trace", "collectives"):
+                print(f"  {k}: {v}")
+        if "collectives" in info:
+            print(f"  collectives: {json.dumps(info['collectives'])}")
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=2)
+
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    n_err = len(results) - n_ok - n_skip
+    print(f"\n=== dry-run summary: {n_ok} ok, {n_skip} skipped, {n_err} errors ===")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — smoke tests and benchmarks must keep
+seeing one CPU device; only launch/dryrun.py sets the 512-placeholder-device
+XLA flag before first jax init.
+
+Axes: ``pod`` (cross-pod DCN, pure DP), ``data`` (intra-pod DP + FSDP/ZeRO
+weight sharding), ``model`` (TP / EP / decode sequence sharding).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)} — run via "
+            "launch/dryrun.py which forces 512 host devices"
+        )
+    # single-pod mesh under the 512-device dry-run process: take one pod
+    return jax.sharding.Mesh(np.array(devices[:n]).reshape(shape), axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, elastic re-meshing)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def host_device_mesh(n: int, axis: str = "data"):
+    """Small single-axis mesh over host CPU devices (distributed tests)."""
+    import numpy as np
+
+    return jax.sharding.Mesh(np.array(jax.devices()[:n]), (axis,))

@@ -1,0 +1,68 @@
+"""jit-wrapped prefill/decode step factories with explicit shardings.
+
+(The train-step factory lives in repro/train/train_step.py; these are the
+serving-side equivalents used by the dry-run and the serving driver.)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import Model, make_mesh_info
+from repro.models import sharding as shd
+
+
+def make_prefill_step(
+    model: Model, mesh: Optional[Mesh], cache_len: int, batch_shapes=None
+):
+    cfg = model.cfg
+    mesh_info = make_mesh_info(mesh, cfg)
+
+    def fn(params, batch):
+        return model.prefill(params, batch, mesh_info, cache_len=cache_len)
+
+    if mesh is None:
+        return jax.jit(fn)
+    pshapes = model.param_shapes()
+    pspecs = shd.sanitize_specs(
+        mesh, shd.param_specs(cfg, pshapes, mesh.shape["model"]), pshapes
+    )
+    bspecs = shd.batch_specs(cfg, mesh, "prefill")
+    bspecs.pop("labels", None)
+    if batch_shapes is not None:
+        bspecs = shd.sanitize_specs(
+            mesh, {k: bspecs[k] for k in batch_shapes}, batch_shapes
+        )
+    to_s = lambda t: shd.to_shardings(mesh, t)
+    return jax.jit(fn, in_shardings=(to_s(pspecs), to_s(bspecs)))
+
+
+def make_decode_step(model: Model, mesh: Optional[Mesh], batch: int, cache_len: int):
+    cfg = model.cfg
+    mesh_info = make_mesh_info(mesh, cfg)
+
+    def fn(params, cache, token):
+        return model.decode_step(params, cache, token, mesh_info)
+
+    if mesh is None:
+        return jax.jit(fn)
+    pshapes = model.param_shapes()
+    pspecs = shd.sanitize_specs(
+        mesh, shd.param_specs(cfg, pshapes, mesh.shape["model"]), pshapes
+    )
+    cshapes = model.cache_shapes(batch, cache_len)
+    cspecs = shd.sanitize_specs(mesh, shd.cache_specs(cfg, mesh, cshapes), cshapes)
+    dp = shd.dp_axes(mesh)
+    tok_spec = shd.sanitize_specs(
+        mesh, P(dp), jax.ShapeDtypeStruct((batch,), jnp.int32)
+    )
+    to_s = lambda t: shd.to_shardings(mesh, t)
+    return jax.jit(
+        fn,
+        in_shardings=(to_s(pspecs), to_s(cspecs), to_s(tok_spec)),
+        out_shardings=(None, to_s(cspecs)),
+        donate_argnums=(1,),
+    )

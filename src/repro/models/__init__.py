@@ -1,0 +1,2 @@
+from repro.models.lm import Model, make_mesh_info  # noqa: F401
+from repro.models.moe import MoEMeshInfo  # noqa: F401

@@ -1,0 +1,168 @@
+"""Attention: chunked (flash-style) training/prefill path + KV-cache decode.
+
+* ``flash_attention`` — online-softmax over KV chunks inside a scan over Q
+  chunks: memory O(S·chunk) instead of O(S²), which is what lets the
+  prefill_32k cells fit HBM. Supports causal and sliding-window masks and
+  GQA head grouping. Pure jnp — the XLA fusion of the chunk body is already
+  near the VPU/MXU roofline for this pattern; a Pallas variant is a §Perf
+  lever, not a correctness need.
+* ``decode_attention`` — one-token attention against a (S_max,) KV cache.
+  The cache's sequence dim is sharded over the ``model`` mesh axis, so the
+  partitioner lowers the softmax reduction to the flash-decode pattern:
+  per-shard partial (max, sum, weighted-V) + tiny cross-shard all-reduces.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+#: finite floor for the running max — keeps exp() arithmetic NaN-free on
+#: fully-masked blocks without predicate `where` guards (whose saved pred
+#: tensors otherwise materialize at full score shape in the backward pass).
+M_FLOOR = -1e9
+
+
+def _divisor_chunk(n: int, want: int) -> int:
+    """Largest chunk ≤ want that divides n (whisper's 1500 frames etc.)."""
+    c = min(want, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def _gqa_expand(q, kv_heads):
+    """Group query heads over KV heads: (B,S,H,hd) -> (B,S,KV,rep,hd)."""
+    b, s, h, hd = q.shape
+    rep = h // kv_heads
+    return q.reshape(b, s, kv_heads, rep, hd)
+
+
+def reference_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """O(S²) oracle for tests."""
+    b, sq, h, hd = q.shape
+    _, sk, kvh, _ = k.shape
+    qg = _gqa_expand(q, kvh)
+    scores = jnp.einsum("bsgrh,btgh->bgrst", qg, k).astype(jnp.float32)
+    scores /= jnp.sqrt(hd)
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kj <= qi
+    if window:
+        mask &= qi - kj < window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrst,btgh->bsgrh", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_chunk", "kv_chunk")
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, H, hd)
+    k: jnp.ndarray,  # (B, S, KV, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    b, s, h, hd = q.shape
+    _, sk, kvh, _ = k.shape
+    q_chunk = _divisor_chunk(s, q_chunk)
+    kv_chunk = _divisor_chunk(sk, kv_chunk)
+    nq, nk = s // q_chunk, sk // kv_chunk
+    rep = h // kvh
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qg = q.reshape(b, nq, q_chunk, kvh, rep, hd)
+    kg = k.reshape(b, nk, kv_chunk, kvh, hd)
+    vg = v.reshape(b, nk, kv_chunk, kvh, hd)
+
+    def q_block(qi, qc):  # qc: (B, q_chunk, KV, rep, hd)
+        m0 = jnp.full((b, kvh, rep, q_chunk), M_FLOOR, jnp.float32)
+        l0 = jnp.zeros((b, kvh, rep, q_chunk), jnp.float32)
+        o0 = jnp.zeros((b, kvh, rep, q_chunk, hd), jnp.float32)
+
+        def kv_block(carry, inputs):
+            m, l, o = carry
+            kj, kc, vc = inputs
+            sc = jnp.einsum("bqgrh,bkgh->bgrqk", qc, kc).astype(jnp.float32) * scale
+            qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            # arithmetic masking: penalty is a (q_chunk, kv_chunk) f32 added
+            # with broadcasting — backward of (+) needs no saved predicate,
+            # unlike where(mask, sc, -inf) whose pred tensor would be saved
+            # at full (B,G,R,Q,K) score shape by remat (§Perf iteration 0).
+            penalty = jnp.zeros((q_chunk, kv_chunk), jnp.float32)
+            if causal:
+                penalty += jnp.where(kpos <= qpos, 0.0, NEG_INF)
+            if window:
+                penalty += jnp.where(qpos - kpos < window, 0.0, NEG_INF)
+            sc = sc + penalty
+            # m floored at M_FLOOR ⇒ sc - m_new ≤ -1e29 on masked lanes ⇒
+            # exp underflows to exactly 0.0; no NaN guards needed.
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            o = o * corr[..., None] + jnp.einsum(
+                "bgrqk,bkgh->bgrqh", p.astype(qc.dtype), vc
+            ).astype(jnp.float32)
+            return (m_new, l, o), None
+
+        (m, l, o), _ = lax.scan(
+            kv_block, (m0, l0, o0), (jnp.arange(nk), kg.swapaxes(0, 1), vg.swapaxes(0, 1))
+        )
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return o.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, h, hd).astype(q.dtype)
+
+    out = lax.map(lambda args: q_block(*args), (jnp.arange(nq), qg.swapaxes(0, 1)))
+    return out.swapaxes(0, 1).reshape(b, s, h, hd)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, hd) — the new token's queries
+    k_cache: jnp.ndarray,  # (B, S_max, KV, hd)
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,  # scalar — number of valid cache positions (inclusive)
+    *,
+    window: int = 0,
+) -> jnp.ndarray:
+    b, _, h, hd = q.shape
+    _, sk, kvh, _ = k_cache.shape
+    qg = _gqa_expand(q, kvh)[:, 0]  # (B, KV, rep, hd)
+    scores = jnp.einsum("bgrh,btgh->bgrt", qg, k_cache).astype(jnp.float32)
+    scores /= jnp.sqrt(hd)
+    t = jnp.arange(sk)
+    valid = t <= pos
+    if window:
+        valid &= pos - t < window
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrt,btgh->bgrh", probs, v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+def cache_update(
+    k_cache: jnp.ndarray, v_cache: jnp.ndarray, k_new: jnp.ndarray, v_new: jnp.ndarray, pos
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Write the new token's K/V at position ``pos``.
+
+    Uses a one-hot masked add rather than dynamic_update_slice so the
+    sequence-sharded cache updates locally on the owning shard (no
+    re-layout collectives under SPMD partitioning).
+    """
+    sk = k_cache.shape[1]
+    onehot = (jnp.arange(sk) == pos)[None, :, None, None].astype(k_cache.dtype)
+    k_cache = k_cache * (1 - onehot) + k_new * onehot
+    v_cache = v_cache * (1 - onehot) + v_new * onehot
+    return k_cache, v_cache

@@ -1,0 +1,223 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed per brief).
+
+``input_specs`` provides precomputed (enc_positions, d_model) frame
+embeddings (the conv frontend stub); the encoder is bidirectional
+self-attention; the decoder adds causal self-attention (KV-cached at decode)
+and cross-attention whose K/V are computed once at prefill.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    _dense,
+    dtype_of,
+    init_attn,
+    init_mlp,
+    next_token_loss,
+    rmsnorm,
+    sinusoidal_positions,
+)
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array) -> Dict:
+    D, V, L, Le = cfg.d_model, cfg.vocab, cfg.n_layers, cfg.enc_layers
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 10)
+    return {
+        "embed": _dense(ks[0], (V, D), D, dt),
+        "enc": {
+            "attn_norm": jnp.ones((Le, D), dt),
+            "mlp_norm": jnp.ones((Le, D), dt),
+            **init_attn(ks[1], cfg, Le),
+            **init_mlp(ks[2], cfg, Le),
+        },
+        "dec": {
+            "attn_norm": jnp.ones((L, D), dt),
+            "cross_norm": jnp.ones((L, D), dt),
+            "mlp_norm": jnp.ones((L, D), dt),
+            **init_attn(ks[3], cfg, L),
+            **{
+                f"x{k}": v
+                for k, v in init_attn(ks[4], cfg, L).items()  # cross-attn
+            },
+            **init_mlp(ks[5], cfg, L),
+        },
+        "enc_final_norm": jnp.ones((D,), dt),
+        "final_norm": jnp.ones((D,), dt),
+        "lm_head": _dense(ks[6], (D, V), D, dt),
+    }
+
+
+def _attend(cfg, h, wq, wk, wv, wo, positions_q, kv=None, causal=True):
+    b, s, D = h.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", h, wq).reshape(b, s, H, hd)
+    if kv is None:
+        k = jnp.einsum("bsd,de->bse", h, wk).reshape(b, s, KV, hd)
+        v = jnp.einsum("bsd,de->bse", h, wv).reshape(b, s, KV, hd)
+    else:
+        k, v = kv
+    o = attn.flash_attention(q, k, v, causal=causal)
+    return jnp.einsum("bse,ed->bsd", o.reshape(b, s, H * hd), wo), (k, v)
+
+
+def encode(cfg: ArchConfig, params: Dict, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, T, D) precomputed stub embeddings."""
+    x = frames.astype(dtype_of(cfg)) + sinusoidal_positions(
+        frames.shape[1], cfg.d_model
+    ).astype(dtype_of(cfg))
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        o, _ = _attend(cfg, h, lp["wq"], lp["wk"], lp["wv"], lp["wo"], None, causal=False)
+        x = x + o
+        h2 = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        g = jnp.einsum("bsd,df->bsf", h2, lp["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", h2, lp["w_up"])
+        y = jnp.einsum(
+            "bsf,fd->bsd", jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u, lp["w_down"]
+        )
+        return x + y, None
+
+    x, _ = lax.scan(body, x, params["enc"])
+    return rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _dec_block(cfg, x, lp, enc_kv, causal=True):
+    h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    o, self_kv = _attend(cfg, h, lp["wq"], lp["wk"], lp["wv"], lp["wo"], None, causal=causal)
+    x = x + o
+    hx = rmsnorm(x, lp["cross_norm"], cfg.norm_eps)
+    o2, _ = _attend(cfg, hx, lp["xwq"], lp["xwk"], lp["xwv"], lp["xwo"], None, kv=enc_kv, causal=False)
+    x = x + o2
+    h2 = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    g = jnp.einsum("bsd,df->bsf", h2, lp["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", h2, lp["w_up"])
+    y = jnp.einsum(
+        "bsf,fd->bsd", jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u, lp["w_down"]
+    )
+    return x + y, self_kv
+
+
+def forward_train(cfg, params, tokens, labels, mesh_info=None, extras=None):
+    extras = extras or {}
+    frames = extras["frames"]  # (B, T, D) stub
+    enc_out = encode(cfg, params, frames)
+    b, s = tokens.shape
+    x = params["embed"][tokens] + sinusoidal_positions(s, cfg.d_model).astype(
+        dtype_of(cfg)
+    )
+
+    def body(x, lp):
+        KV, hd = cfg.n_kv_heads, cfg.hd
+        ek = jnp.einsum("btd,de->bte", enc_out, lp["xwk"]).reshape(
+            b, enc_out.shape[1], KV, hd
+        )
+        ev = jnp.einsum("btd,de->bte", enc_out, lp["xwv"]).reshape(
+            b, enc_out.shape[1], KV, hd
+        )
+        x, _ = _dec_block(cfg, x, lp, (ek, ev))
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["dec"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return next_token_loss(logits[:, :-1], labels[:, 1:]), {}
+
+
+def prefill(cfg, params, tokens, mesh_info=None, extras=None, cache_len=None):
+    """Encode frames, run the prompt through the decoder, build caches."""
+    extras = extras or {}
+    enc_out = encode(cfg, params, extras["frames"])
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    x = params["embed"][tokens] + sinusoidal_positions(s, cfg.d_model).astype(
+        dtype_of(cfg)
+    )
+
+    def body(x, lp):
+        KV, hd = cfg.n_kv_heads, cfg.hd
+        t = enc_out.shape[1]
+        ek = jnp.einsum("btd,de->bte", enc_out, lp["xwk"]).reshape(b, t, KV, hd)
+        ev = jnp.einsum("btd,de->bte", enc_out, lp["xwv"]).reshape(b, t, KV, hd)
+        x, (k, v) = _dec_block(cfg, x, lp, (ek, ev))
+        pad = cache_len - s
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, (kc, vc, ek, ev)
+
+    x, (kc, vc, ek, ev) = lax.scan(body, x, params["dec"])
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return {
+        "k": kc,
+        "v": vc,
+        "xk": ek,
+        "xv": ev,
+        "pos": jnp.full((), s - 1, jnp.int32),
+    }, logits
+
+
+def decode_step(cfg, params, cache, token, mesh_info=None):
+    b = token.shape[0]
+    pos = cache["pos"] + 1
+    x = params["embed"][token][:, None, :]
+    # learned-position stub: sinusoidal at pos
+    posemb = sinusoidal_positions(cache["k"].shape[2], cfg.d_model)
+    x = x + lax.dynamic_index_in_dim(posemb, pos, 0, keepdims=True).astype(x.dtype)
+
+    def body(x, inputs):
+        lp, kc, vc, ek, ev = inputs
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,de->bse", h, lp["wq"]).reshape(b, 1, H, hd)
+        k = jnp.einsum("bsd,de->bse", h, lp["wk"]).reshape(b, 1, KV, hd)
+        v = jnp.einsum("bsd,de->bse", h, lp["wv"]).reshape(b, 1, KV, hd)
+        kc, vc = attn.cache_update(kc, vc, k, v, pos)
+        o = attn.decode_attention(q, kc, vc, pos)
+        x = x + jnp.einsum("bse,ed->bsd", o.reshape(b, 1, H * hd), lp["wo"])
+        hx = rmsnorm(x, lp["cross_norm"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,de->bse", hx, lp["xwq"]).reshape(b, 1, H, hd)
+        ox = attn.decode_attention(
+            qx, ek, ev, jnp.full((), ek.shape[1] - 1, jnp.int32)
+        )
+        x = x + jnp.einsum("bse,ed->bsd", ox.reshape(b, 1, H * hd), lp["xwo"])
+        h2 = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        g = jnp.einsum("bsd,df->bsf", h2, lp["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", h2, lp["w_up"])
+        y = jnp.einsum(
+            "bsf,fd->bsd",
+            jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u,
+            lp["w_down"],
+        )
+        return x + y, (kc, vc)
+
+    x, (kc, vc) = lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return logits, {"k": kc, "v": vc, "xk": cache["xk"], "xv": cache["xv"], "pos": pos}
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, cache_len: int):
+    KV, hd, L = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    dt = dtype_of(cfg)
+    t = cfg.enc_positions
+    return {
+        "k": jax.ShapeDtypeStruct((L, batch, cache_len, KV, hd), dt),
+        "v": jax.ShapeDtypeStruct((L, batch, cache_len, KV, hd), dt),
+        "xk": jax.ShapeDtypeStruct((L, batch, t, KV, hd), dt),
+        "xv": jax.ShapeDtypeStruct((L, batch, t, KV, hd), dt),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,234 @@
+"""Jamba-style hybrid: Mamba + attention 1:7 interleave, MoE every 2nd layer.
+
+Layer i is attention iff ``i % attn_period == attn_period//2`` (one per
+period), else Mamba; the MLP is MoE on odd layers, dense on even. To keep
+scan-over-layers, the stack is organized as ``n_layers/attn_period``
+*super-blocks*, each containing (period-1) Mamba sub-layers and 1 attention
+sub-layer with their MLPs — one ``lax.scan`` over super-blocks, Python loop
+over the period inside (HLO size ∝ period, not depth).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (
+    _dense,
+    dtype_of,
+    init_attn,
+    init_mlp,
+    next_token_loss,
+    rmsnorm,
+    rope,
+)
+from repro.models.transformer import _head_shard, _shard_residual
+
+
+def _layout(cfg: ArchConfig):
+    period = cfg.attn_period
+    blocks = cfg.n_layers // period
+    return period, blocks
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array) -> Dict:
+    period, blocks = _layout(cfg)
+    D, V = cfg.d_model, cfg.vocab
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 8)
+    # one attention sub-layer per super-block
+    attn_p = init_attn(ks[0], cfg, blocks)
+    # period-1 mamba sub-layers per super-block: leaves (blocks, period-1, ...)
+    def per_slot(init_fn, rng, n_slots, count):
+        outs = [init_fn(jax.random.fold_in(rng, i), cfg, count) for i in range(n_slots)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *outs)
+
+    mamba_p = per_slot(ssm.init_mamba, ks[1], period - 1, blocks)
+    # MLPs: within a period, slots alternate dense/MoE per cfg.moe_every
+    n_moe = sum(1 for i in range(period) if cfg.is_moe_layer(i))
+    n_dense = period - n_moe
+    dense_p = per_slot(init_mlp, ks[2], n_dense, blocks)
+    moe_p = per_slot(moe_mod.init_moe, ks[3], n_moe, blocks)
+    norms = {
+        "attn_norm": jnp.ones((blocks, period, D), dt),
+        "mlp_norm": jnp.ones((blocks, period, D), dt),
+    }
+    return {
+        "embed": _dense(ks[4], (V, D), D, dt),
+        "blocks": {"attn": attn_p, "mamba": mamba_p, "dense": dense_p, "moe": moe_p, **norms},
+        "final_norm": jnp.ones((D,), dt),
+        "lm_head": _dense(ks[5], (D, V), D, dt),
+    }
+
+
+def _super_block(cfg, mesh_info, x, bp, positions, states=None, pos=None):
+    """One super-block (period sub-layers). states: per-sub-layer decode state."""
+    period, _ = _layout(cfg)
+    attn_slot = period // 2
+    i_mamba = i_dense = i_moe = 0
+    new_states = {"mamba": [], "k": None, "v": None}
+    aux_acc = None
+    b = x.shape[0]
+    for i in range(period):
+        x = _shard_residual(x, cfg, mesh_info, seq_shard=(x.shape[1] > 1))
+        h = rmsnorm(x, bp["attn_norm"][i], cfg.norm_eps)
+        if i == attn_slot:
+            if states is None:  # train/prefill
+                H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+                s = x.shape[1]
+                q = jnp.einsum("bsd,de->bse", h, bp["attn"]["wq"]).reshape(b, s, H, hd)
+                k = jnp.einsum("bsd,de->bse", h, bp["attn"]["wk"]).reshape(b, s, KV, hd)
+                v = jnp.einsum("bsd,de->bse", h, bp["attn"]["wv"]).reshape(b, s, KV, hd)
+                q, k, v = _head_shard(cfg, mesh_info, q, k, v)  # reshard once/layer
+                q, k = rope(q, positions, cfg.rope_theta), rope(k, positions, cfg.rope_theta)
+                o = attn.flash_attention(q, k, v, causal=True)
+                new_states["k"], new_states["v"] = k, v
+            else:  # decode
+                H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+                q = jnp.einsum("bsd,de->bse", h, bp["attn"]["wq"]).reshape(b, 1, H, hd)
+                k = jnp.einsum("bsd,de->bse", h, bp["attn"]["wk"]).reshape(b, 1, KV, hd)
+                v = jnp.einsum("bsd,de->bse", h, bp["attn"]["wv"]).reshape(b, 1, KV, hd)
+                q, k = rope(q, positions, cfg.rope_theta), rope(k, positions, cfg.rope_theta)
+                kc, vc = attn.cache_update(states["k"], states["v"], k, v, pos)
+                o = attn.decode_attention(q, kc, vc, pos)
+                new_states["k"], new_states["v"] = kc, vc
+            o = jnp.einsum(
+                "bse,ed->bsd", o.reshape(b, o.shape[1], cfg.n_heads * cfg.hd), bp["attn"]["wo"]
+            )
+        else:
+            mp = jax.tree.map(lambda a: a[i_mamba], bp["mamba"])
+            st = None if states is None else states["mamba"][i_mamba]
+            o, new_st = ssm.mamba_block(mp, h, cfg, st)
+            new_states["mamba"].append(new_st)
+            i_mamba += 1
+        x = x + o
+        h2 = rmsnorm(x, bp["mlp_norm"][i], cfg.norm_eps)
+        if cfg.is_moe_layer(i):
+            lp = jax.tree.map(lambda a: a[i_moe], bp["moe"])
+            mi = mesh_info if mesh_info is not None else moe_mod.MoEMeshInfo()
+            if mi.mesh is not None and cfg.moe_experts >= mi.model_size and x.shape[1] > 1:
+                y, aux = moe_mod.moe_ep(lp, h2, cfg, mi)
+            elif mi.mesh is not None and cfg.moe_experts >= mi.model_size:
+                y, aux = moe_mod.moe_ep_decode(lp, h2, cfg, mi)
+            else:
+                y, aux = moe_mod.moe_tp(lp, h2, cfg)
+            aux_acc = (
+                aux
+                if aux_acc is None
+                else jax.tree.map(
+                    lambda a, bb: (a | bb) if a.dtype == bool else a + bb, aux_acc, aux
+                )
+            )
+            i_moe += 1
+        else:
+            dp_ = jax.tree.map(lambda a: a[i_dense], bp["dense"])
+            g = jnp.einsum("bsd,df->bsf", h2, dp_["w_gate"])
+            u = jnp.einsum("bsd,df->bsf", h2, dp_["w_up"])
+            y = jnp.einsum(
+                "bsf,fd->bsd", jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u, dp_["w_down"]
+            )
+            i_dense += 1
+        x = x + y
+    if aux_acc is None:
+        aux_acc = {
+            "lb_loss": jnp.zeros(()),
+            "z_loss": jnp.zeros(()),
+            "overflow": jnp.zeros((), bool),
+        }
+    return x, new_states, aux_acc
+
+
+def forward_train(cfg, params, tokens, labels, mesh_info=None, extras=None):
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    block = functools.partial(_super_block, cfg, mesh_info)
+    if cfg.remat:
+        block = jax.checkpoint(block)
+
+    def scan_body(x, bp):
+        x, _, aux = block(x, bp, positions)
+        return x, aux
+
+    x, auxs = lax.scan(scan_body, x, params["blocks"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    loss = next_token_loss(logits[:, :-1], labels[:, 1:])
+    aux = {k: (v.sum() if v.dtype != bool else v.any()) for k, v in auxs.items()}
+    loss = loss + 0.01 * aux["lb_loss"] + 1e-3 * aux["z_loss"]
+    return loss, aux
+
+
+def prefill(cfg, params, tokens, mesh_info=None, extras=None, cache_len=None):
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def scan_body(x, bp):
+        x, st, _ = _super_block(cfg, mesh_info, x, bp, positions)
+        pad = cache_len - s
+        kc = jnp.pad(st["k"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(st["v"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        mamba_st = jax.tree.map(lambda *xs: jnp.stack(xs), *st["mamba"])
+        return x, (kc, vc, mamba_st)
+
+    x, (kc, vc, mamba_st) = lax.scan(scan_body, x, params["blocks"])
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    cache = {
+        "k": kc,
+        "v": vc,
+        "mamba": mamba_st,
+        "pos": jnp.full((), s - 1, jnp.int32),
+    }
+    return cache, logits
+
+
+def decode_step(cfg, params, cache, token, mesh_info=None):
+    b = token.shape[0]
+    pos = cache["pos"] + 1
+    x = params["embed"][token][:, None, :]
+    positions = jnp.broadcast_to(pos[None], (b, 1))
+    period, _ = _layout(cfg)
+
+    def scan_body(x, inputs):
+        bp, kc, vc, mamba_st = inputs
+        states = {
+            "k": kc,
+            "v": vc,
+            "mamba": [jax.tree.map(lambda a: a[i], mamba_st) for i in range(period - 1)],
+        }
+        x, st, _ = _super_block(cfg, mesh_info, x, bp, positions, states=states, pos=pos)
+        new_mamba = jax.tree.map(lambda *xs: jnp.stack(xs), *st["mamba"])
+        return x, (st["k"], st["v"], new_mamba)
+
+    x, (kc, vc, mamba_st) = lax.scan(
+        scan_body, x, (params["blocks"], cache["k"], cache["v"], cache["mamba"])
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return logits, {"k": kc, "v": vc, "mamba": mamba_st, "pos": pos}
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, cache_len: int):
+    period, blocks = _layout(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    dt = dtype_of(cfg)
+    (hsh, csh) = ssm.mamba_state_shape(cfg, batch)
+    return {
+        "k": jax.ShapeDtypeStruct((blocks, batch, cache_len, KV, hd), dt),
+        "v": jax.ShapeDtypeStruct((blocks, batch, cache_len, KV, hd), dt),
+        "mamba": (
+            jax.ShapeDtypeStruct((blocks, period - 1) + hsh, jnp.float32),
+            jax.ShapeDtypeStruct((blocks, period - 1) + csh, dt),
+        ),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,98 @@
+"""Shared transformer building blocks (pure functions over param pytrees).
+
+Params are plain nested dicts of jnp arrays; every per-layer leaf carries a
+leading ``L`` dim so the layer stack lowers to one ``lax.scan`` (HLO size
+independent of depth — essential for 512-device dry-run compiles).
+Compute dtype is bf16 with fp32 accumulations in norms/softmax/loss.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------- init
+def _dense(rng, shape, scale_dim, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) / jnp.sqrt(scale_dim)).astype(
+        dtype
+    )
+
+
+def init_attn(rng, cfg: ArchConfig, layers: int) -> Dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(rng, 4)
+    dt = dtype_of(cfg)
+    return {
+        "wq": _dense(ks[0], (layers, D, H * hd), D, dt),
+        "wk": _dense(ks[1], (layers, D, KV * hd), D, dt),
+        "wv": _dense(ks[2], (layers, D, KV * hd), D, dt),
+        "wo": _dense(ks[3], (layers, H * hd, D), H * hd, dt),
+    }
+
+
+def init_mlp(rng, cfg: ArchConfig, layers: int, d_ff: int | None = None) -> Dict:
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    dt = dtype_of(cfg)
+    return {
+        "w_gate": _dense(ks[0], (layers, D, F), D, dt),
+        "w_up": _dense(ks[1], (layers, D, F), D, dt),
+        "w_down": _dense(ks[2], (layers, F, D), F, dt),
+    }
+
+
+# ---------------------------------------------------------------- normals
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def swiglu(x: jnp.ndarray, p: Dict) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# -------------------------------------------------------------------- rope
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :d]
+
+
+# -------------------------------------------------------------------- loss
+def next_token_loss(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Mean cross-entropy; logits (B, S, V) possibly vocab-sharded (the
+    logsumexp reduction partitions cleanly), labels (B, S)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,120 @@
+"""Unified model API over the four family implementations.
+
+    model = Model(cfg)
+    params = model.init(rng)
+    loss, aux = model.train_loss(params, batch, mesh_info)
+    cache, logits = model.prefill(params, tokens, ...)
+    logits, cache = model.decode_step(params, cache, token)
+    specs = model.input_specs(shape)      # ShapeDtypeStructs for the dry-run
+
+``input_specs`` provides every input as a ShapeDtypeStruct (weak-type
+correct, shardable, no allocation) — the modality frontends (audio frames /
+vision patches) appear here as precomputed embeddings per the brief.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, hybrid, transformer, xlstm
+from repro.models.layers import dtype_of
+from repro.models.moe import MoEMeshInfo
+
+_FAMILY_MODS = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "hybrid": hybrid,
+    "ssm": xlstm,
+    "audio": encdec,
+}
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    @property
+    def mod(self):
+        return _FAMILY_MODS[self.cfg.family]
+
+    # ------------------------------------------------------------- params
+    def init(self, rng: jax.Array) -> Dict:
+        return self.mod.init_params(self.cfg, rng)
+
+    def param_shapes(self, rng: Optional[jax.Array] = None) -> Any:
+        """ShapeDtypeStruct tree without allocating (for the dry-run)."""
+        rng = rng if rng is not None else jax.random.key(0)
+        return jax.eval_shape(lambda r: self.mod.init_params(self.cfg, r), rng)
+
+    # -------------------------------------------------------------- steps
+    def train_loss(self, params, batch: Dict, mesh_info=None) -> Tuple[Any, Dict]:
+        extras = {
+            k: v for k, v in batch.items() if k not in ("tokens", "labels")
+        }
+        return self.mod.forward_train(
+            self.cfg, params, batch["tokens"], batch["labels"], mesh_info, extras
+        )
+
+    def prefill(self, params, batch: Dict, mesh_info=None, cache_len=None):
+        extras = {k: v for k, v in batch.items() if k != "tokens"}
+        return self.mod.prefill(
+            self.cfg, params, batch["tokens"], mesh_info, extras, cache_len
+        )
+
+    def decode_step(self, params, cache, token, mesh_info=None):
+        return self.mod.decode_step(self.cfg, params, cache, token, mesh_info)
+
+    def cache_shapes(self, batch: int, cache_len: int):
+        return self.mod.cache_shapes(self.cfg, batch, cache_len)
+
+    # ------------------------------------------------------------- specs
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        dt = dtype_of(cfg)
+        if shape.kind == "train":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+            if cfg.family == "vlm":
+                specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.vision_tokens, cfg.d_model), dt
+                )
+            if cfg.family == "audio":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.enc_positions, cfg.d_model), dt
+                )
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.family == "vlm":
+                specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.vision_tokens, cfg.d_model), dt
+                )
+            if cfg.family == "audio":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.enc_positions, cfg.d_model), dt
+                )
+            return specs
+        # decode: one new token against a seq_len cache
+        return {
+            "token": jax.ShapeDtypeStruct((B,), i32),
+            "cache": self.cache_shapes(B, S),
+        }
+
+
+def make_mesh_info(mesh, cfg: ArchConfig) -> Optional[MoEMeshInfo]:
+    if mesh is None:
+        return None
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if cfg.param_sharding == "dp":
+        dp = dp + ("model",)  # model axis repurposed as extra DP
+    return MoEMeshInfo(mesh=mesh, model_axis="model", data_axes=dp)

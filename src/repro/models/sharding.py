@@ -1,0 +1,214 @@
+"""Parameter / activation PartitionSpec assignment (DESIGN.md §6).
+
+Policy ``2d``: FSDP over ``data`` × TP over ``model`` (weights 2-D sharded;
+XLA inserts the per-layer all-gathers — ZeRO-3-style); policy ``1d``: TP
+only. The ``pod`` axis is pure DP: parameters are never sharded over it;
+gradients are all-reduced hierarchically across it.
+
+Rules are name-based over the param pytree paths; per-layer leaves carry
+1-2 leading stack dims which map to ``None``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# trailing-dims spec by leaf name: (in-dim axis, out-dim axis) semantics.
+_MATMUL_RULES = {
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "xwq": ("data", "model"),
+    "xwk": ("data", "model"),
+    "xwv": ("data", "model"),
+    "xwo": ("model", "data"),
+    "w_gate": ("data", "model"),
+    "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    "in_proj": ("data", "model"),
+    "out_proj": ("model", "data"),
+    "up": ("data", "model"),
+    "down": ("model", "data"),
+    "w_zifo": ("data", "model"),
+    "w_xdbc": ("model", None),
+    "w_dt": (None, "model"),
+}
+_VECTOR_RULES = {  # 1 trailing dim
+    "conv_b": ("model",),
+    "b_dt": ("model",),
+    "D": ("model",),
+}
+_MATRIX_RULES = {  # non-matmul 2-trailing-dim leaves
+    "conv_w": (None, "model"),
+    "A_log": ("model", None),
+}
+
+
+def _path_names(path) -> list:
+    return [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+
+
+def param_specs(
+    cfg: ArchConfig, params_tree: Any, model_axis_size: int = 16
+) -> Any:
+    """PartitionSpec tree matching ``params_tree`` (arrays or ShapeDtypeStructs)."""
+    if cfg.param_sharding == "dp":
+        # pure data parallelism: replicated weights, every mesh axis shards
+        # the batch; optimizer state stays 2-D sharded (ZeRO-1) — see
+        # make_train_step. §Perf iteration A2: the right regime for ≲4B
+        # archs where TP=16 makes activation collectives dominate.
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: P(*([None] * len(leaf.shape))), params_tree
+        )
+    fsdp = "data" if cfg.param_sharding == "2d" else None
+
+    def fix(ax):
+        return fsdp if ax == "data" else ax
+
+    def spec_for(path, leaf) -> P:
+        names = _path_names(path)
+        name = names[-1]
+        ndim = len(leaf.shape)
+        if name == "embed":
+            return P("model", fsdp)
+        if name == "lm_head":
+            return P(fsdp, "model")
+        if name in ("router",):
+            return P(*([None] * ndim))
+        is_moe_leaf = (
+            name in ("w_gate", "w_up", "w_down")
+            and cfg.moe_experts
+            and "dense" not in names  # hybrid's dense-MLP stacks are not MoE
+            and ("moe" in names or ndim >= 4)
+        )
+        if is_moe_leaf:
+            # MoE expert tensors (..., E, D, F) / (..., E, F, D)
+            lead = [None] * (ndim - 3)
+            if cfg.moe_experts >= model_axis_size:  # EP: experts over model
+                if name == "w_down":
+                    return P(*lead, "model", None, fsdp)
+                return P(*lead, "model", fsdp, None)
+            # TP: experts replicated, F sharded
+            if name == "w_down":
+                return P(*lead, None, "model", fsdp)
+            return P(*lead, None, fsdp, "model")
+        if name in _MATMUL_RULES and ndim >= 2:
+            a, b = _MATMUL_RULES[name]
+            return P(*([None] * (ndim - 2)), fix(a), fix(b))
+        if name in _MATRIX_RULES and ndim >= 2:
+            a, b = _MATRIX_RULES[name]
+            return P(*([None] * (ndim - 2)), fix(a), fix(b))
+        if name in _VECTOR_RULES and ndim >= 1:
+            (a,) = _VECTOR_RULES[name]
+            return P(*([None] * (ndim - 1)), fix(a))
+        return P(*([None] * ndim))  # norms, biases, gates
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_tree)
+
+
+def dp_axes(mesh: Optional[Mesh], cfg: Optional[ArchConfig] = None):
+    if mesh is None:
+        return ("data",)
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if cfg is not None and cfg.param_sharding == "dp":
+        axes = axes + ("model",)  # the model axis becomes extra DP
+    return axes
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, kind: str) -> Dict[str, P]:
+    dp = dp_axes(mesh, cfg)
+    specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = P(dp, None, None)
+    if cfg.family == "audio":
+        specs["frames"] = P(dp, None, None)
+    if kind == "decode":
+        specs = {"token": P(dp)}
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, cache_tree: Any) -> Any:
+    """KV caches: batch over DP axes, *sequence over the model axis* (the
+    flash-decode layout — see models/attention.py); recurrent states: batch
+    over DP, channel dim over model."""
+    dp = dp_axes(mesh)
+
+    def spec_for(path, leaf) -> P:
+        names = _path_names(path)
+        name = names[0] if names else None
+        ndim = len(leaf.shape)
+        if name in ("k", "v", "xk", "xv"):  # (L, B, S, KV, hd)
+            return P(None, dp, "model", None, None)
+        if name == "mamba":  # (blocks, slots, B, di, N) / (blocks, slots, B, dk-1, di)
+            if ndim == 5:
+                idx = getattr(path[-1], "idx", 0)
+                if idx == 0:
+                    return P(None, None, dp, "model", None)
+                return P(None, None, dp, None, "model")
+            return P(*([None] * ndim))
+        if name in ("mlstm", "slstm"):
+            return P(None, dp, *([None] * (ndim - 2)))
+        if name == "pos":
+            return P()
+        return P(*([None] * ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def sanitize_specs(mesh: Optional[Mesh], spec_tree: Any, shape_tree: Any) -> Any:
+    """Drop spec axes whose mesh size does not divide the dim (pjit requires
+    exact divisibility for explicit in_shardings): uneven vocabularies
+    (49155, 51865), batch=1 decode cells, GQA kv-heads < model axis, etc.
+    fall back to replication on that dim — correctness-neutral, and the
+    roofline table shows the cost."""
+    if mesh is None:
+        return spec_tree
+
+    def fit(dim, entry):
+        """Largest prefix of a (possibly multi-axis) entry that divides dim."""
+        if entry is None or dim % _axis_size(mesh, entry) == 0:
+            return entry
+        if isinstance(entry, (tuple, list)):
+            for cut in range(len(entry) - 1, 0, -1):
+                sub = tuple(entry[:cut])
+                if dim % _axis_size(mesh, sub) == 0:
+                    return sub if len(sub) > 1 else sub[0]
+        return None
+
+    def fix(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        dims = leaf.shape
+        entries = list(spec) + [None] * (len(dims) - len(spec))
+        return P(*(fit(d, e) for d, e in zip(dims, entries)))
+
+    return jax.tree.map(
+        fix, spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def to_shardings(mesh: Optional[Mesh], spec_tree: Any) -> Any:
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,220 @@
+"""State-space / recurrent blocks: Mamba (S6) for jamba, mLSTM/sLSTM for xlstm.
+
+Both families are linear in sequence length (constant-size recurrent state),
+which is what qualifies jamba/xlstm for the long_500k cell. Training uses a
+``lax.scan`` over time (an associative-scan variant is a §Perf lever);
+decoding is a single recurrence step on a carried state — O(1) per token
+regardless of context length.
+
+Simplifications vs the reference implementations (documented per DESIGN.md):
+Mamba keeps the S6 selective scan with low-rank Δ projection but omits
+bidirectional/groups; sLSTM omits the recurrent gate matrices R (gates are
+input-conditioned only); mLSTM follows the exponential-gating/stabilizer
+formulation with per-head scalar gates.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _dense, dtype_of
+
+
+# ------------------------------------------------------------------ mamba
+def mamba_dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    di = cfg.mamba_expand * cfg.d_model
+    return di, cfg.mamba_d_state, cfg.mamba_d_conv, max(cfg.d_model // 16, 1)
+
+
+def init_mamba(rng, cfg: ArchConfig, layers: int) -> Dict:
+    D = cfg.d_model
+    di, N, dk, dtr = mamba_dims(cfg)
+    ks = jax.random.split(rng, 8)
+    dt = dtype_of(cfg)
+    return {
+        "in_proj": _dense(ks[0], (layers, D, 2 * di), D, dt),
+        "conv_w": _dense(ks[1], (layers, dk, di), dk, dt),
+        "conv_b": jnp.zeros((layers, di), dt),
+        "w_xdbc": _dense(ks[2], (layers, di, dtr + 2 * N), di, dt),
+        "w_dt": _dense(ks[3], (layers, dtr, di), dtr, jnp.float32),
+        "b_dt": jnp.full((layers, di), -4.6, jnp.float32),  # softplus ≈ 0.01
+        "A_log": jnp.tile(
+            jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))[None, None, :],
+            (layers, di, 1),
+        ),
+        "D": jnp.ones((layers, di), jnp.float32),
+        "out_proj": _dense(ks[4], (layers, di, D), di, dt),
+    }
+
+
+def _mamba_inner(p: Dict, x1, z, h0, cfg: ArchConfig):
+    """Selective scan. x1 (B,S,di) post-conv, h0 (B,di,N). Returns y, h."""
+    di, N, _, dtr = mamba_dims(cfg)
+    A = -jnp.exp(p["A_log"])  # (di, N)
+    xdbc = jnp.einsum("bsd,dr->bsr", x1, p["w_xdbc"]).astype(jnp.float32)
+    dtr_part, B_part, C_part = jnp.split(xdbc, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dtr_part, p["w_dt"]) + p["b_dt"])
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp  # (B,di) (B,N) (B,N) (B,di)
+        da = jnp.exp(dt_t[:, :, None] * A[None])  # (B,di,N)
+        h = da * h + (dt_t * x_t.astype(jnp.float32))[:, :, None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (
+        dt.swapaxes(0, 1),
+        B_part.swapaxes(0, 1),
+        C_part.swapaxes(0, 1),
+        x1.swapaxes(0, 1),
+    )
+    h, ys = lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1) + p["D"] * x1.astype(jnp.float32)  # (B,S,di)
+    y = y.astype(x1.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x1.dtype)
+    return y, h
+
+
+def mamba_block(p: Dict, x: jnp.ndarray, cfg: ArchConfig, state=None):
+    """x (B,S,D) -> (y (B,S,D), state). state = (h (B,di,N), conv (B,dk-1,di))."""
+    b, s, D = x.shape
+    di, N, dk, _ = mamba_dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x1, z = jnp.split(xz, 2, axis=-1)
+    if state is None:
+        conv_st = jnp.zeros((b, dk - 1, di), x.dtype)
+        h0 = jnp.zeros((b, di, N), jnp.float32)
+    else:
+        h0, conv_st = state
+    # causal conv over time with carried left context
+    xc = jnp.concatenate([conv_st, x1], axis=1)  # (B, S+dk-1, di)
+    conv = sum(
+        xc[:, i : i + s, :] * p["conv_w"][i][None, None, :] for i in range(dk)
+    ) + p["conv_b"]
+    x1 = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    y, h = _mamba_inner(p, x1, z, h0, cfg)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    new_conv = xc[:, -(dk - 1) :, :] if dk > 1 else conv_st
+    return out, (h, new_conv)
+
+
+def mamba_state_shape(cfg: ArchConfig, batch: int):
+    di, N, dk, _ = mamba_dims(cfg)
+    return ((batch, di, N), (batch, dk - 1, di))
+
+
+# ------------------------------------------------------------------ xlstm
+def init_mlstm(rng, cfg: ArchConfig, layers: int) -> Dict:
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.d_model // cfg.n_heads
+    ks = jax.random.split(rng, 7)
+    dt = dtype_of(cfg)
+    return {
+        "wq": _dense(ks[0], (layers, D, D), D, dt),
+        "wk": _dense(ks[1], (layers, D, D), D, dt),
+        "wv": _dense(ks[2], (layers, D, D), D, dt),
+        "wo": _dense(ks[3], (layers, D, D), D, dt),
+        "w_i": _dense(ks[4], (layers, D, H), D, jnp.float32),
+        "w_f": _dense(ks[5], (layers, D, H), D, jnp.float32),
+        "b_i": jnp.zeros((layers, H), jnp.float32),
+        "b_f": jnp.full((layers, H), 3.0, jnp.float32),
+        "up": _dense(ks[6], (layers, D, 2 * D), D, dt),
+        "down": _dense(jax.random.fold_in(ks[6], 1), (layers, 2 * D, D), 2 * D, dt),
+    }
+
+
+def mlstm_core(p: Dict, x: jnp.ndarray, cfg: ArchConfig, state=None):
+    """Matrix-memory LSTM with exponential gating + stabilizer.
+
+    state = (C (B,H,hd,hd), n (B,H,hd), m (B,H)).
+    """
+    b, s, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, H, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, H, hd) / jnp.sqrt(hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, H, hd)
+    log_i = (jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["w_i"]) + p["b_i"])
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["w_f"]) + p["b_f"]
+    )
+    if state is None:
+        C0 = jnp.zeros((b, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, H, hd), jnp.float32)
+        m0 = jnp.full((b, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)[..., None]
+        f_ = jnp.exp(lf + m - m_new)[..., None]
+        kf = kt.astype(jnp.float32)
+        vf = vt.astype(jnp.float32)
+        C = f_[..., None] * C + i_[..., None] * (vf[..., :, None] * kf[..., None, :])
+        n = f_ * n + i_ * kf
+        qf = qt.astype(jnp.float32)
+        num = jnp.einsum("bhij,bhj->bhi", C, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qf)), 1.0)
+        return (C, n, m_new), (num / den[..., None])
+
+    xs = tuple(a.swapaxes(0, 1) for a in (q, k, v, log_i, log_f))
+    (C, n, m), hs = lax.scan(step, (C0, n0, m0), xs)
+    h = hs.swapaxes(0, 1).reshape(b, s, D).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", h, p["wo"])
+    return out, (C, n, m)
+
+
+def init_slstm(rng, cfg: ArchConfig, layers: int) -> Dict:
+    D = cfg.d_model
+    ks = jax.random.split(rng, 3)
+    dt = dtype_of(cfg)
+    return {
+        "w_zifo": _dense(ks[0], (layers, D, 4 * D), D, jnp.float32),
+        "b_zifo": jnp.zeros((layers, 4 * D), jnp.float32),
+        "up": _dense(ks[1], (layers, D, 2 * D), D, dt),
+        "down": _dense(ks[2], (layers, 2 * D, D), 2 * D, dt),
+        "wo": _dense(jax.random.fold_in(ks[2], 1), (layers, D, D), D, dt),
+    }
+
+
+def slstm_core(p: Dict, x: jnp.ndarray, cfg: ArchConfig, state=None):
+    """Scalar-memory LSTM with exponential gating. state = (c, n, m) (B,D)."""
+    b, s, D = x.shape
+    zifo = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["w_zifo"]) + p["b_zifo"]
+    z, log_i, f_pre, o = jnp.split(zifo, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    if state is None:
+        c0 = jnp.zeros((b, D), jnp.float32)
+        n0 = jnp.zeros((b, D), jnp.float32)
+        m0 = jnp.full((b, D), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def step(carry, inp):
+        c, n, m = carry
+        zt, li, lf, ot = inp
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        c = f_ * c + i_ * jnp.tanh(zt)
+        n = f_ * n + i_
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new), h
+
+    xs = tuple(a.swapaxes(0, 1) for a in (z, log_i, log_f, o))
+    (c, n, m), hs = lax.scan(step, (c0, n0, m0), xs)
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", h, p["wo"])
+    return out, (c, n, m)
+
+
+def xlstm_proj(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Post-core up/down projection (replaces the FFN; d_ff=0 per spec)."""
+    u = jnp.einsum("bsd,de->bse", x, p["up"])  # (.., 2D)
+    h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", h, p["down"])

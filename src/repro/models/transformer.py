@@ -1,0 +1,280 @@
+"""Decoder-only transformer LM (families: dense, moe, vlm).
+
+Scan-over-layers (HLO depth-independent), pre-norm GQA attention with RoPE,
+SwiGLU or MoE MLP, optional sliding window (mixtral). The VLM family
+receives stub patch embeddings (per the brief) overwriting the first
+``vision_tokens`` positions.
+
+Three entry points per the shape kinds: ``forward_train`` (full logits →
+loss), ``prefill`` (build KV cache, last-position logits), ``decode_step``
+(one token through the cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    _dense,
+    dtype_of,
+    init_attn,
+    init_mlp,
+    next_token_loss,
+    rmsnorm,
+    rope,
+)
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array) -> Dict:
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    ks = jax.random.split(rng, 6)
+    dt = dtype_of(cfg)
+    layers = {
+        "attn_norm": jnp.ones((L, D), dt),
+        "mlp_norm": jnp.ones((L, D), dt),
+        **init_attn(ks[0], cfg, L),
+    }
+    if cfg.moe_experts:
+        layers.update(moe_mod.init_moe(ks[1], cfg, L))
+    else:
+        layers.update(init_mlp(ks[1], cfg, L))
+    return {
+        "embed": _dense(ks[2], (V, D), D, dt),
+        "layers": layers,
+        "final_norm": jnp.ones((D,), dt),
+        "lm_head": _dense(ks[3], (D, V), D, dt),
+    }
+
+
+def _shard_residual(x, cfg: ArchConfig, mesh_info, *, seq_shard: bool):
+    """Megatron-SP style: keep the residual stream sequence-sharded over the
+    model axis between blocks (activation memory / lg p per device)."""
+    if mesh_info is None or mesh_info.mesh is None:
+        return x
+    dp = mesh_info.data_axes
+    seq = (
+        mesh_info.model_axis
+        if (seq_shard and cfg.seq_shard_activations and mesh_info.model_axis not in dp)
+        else None
+    )
+    return lax.with_sharding_constraint(
+        x, NamedSharding(mesh_info.mesh, P(dp, seq, None))
+    )
+
+
+def _attention_block(cfg, lp, h, positions, *, window, mesh_info=None):
+    b, s, D = h.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", h, lp["wq"]).reshape(b, s, H, hd)
+    k = jnp.einsum("bsd,de->bse", h, lp["wk"]).reshape(b, s, KV, hd)
+    v = jnp.einsum("bsd,de->bse", h, lp["wv"]).reshape(b, s, KV, hd)
+    q, k, v = _head_shard(cfg, mesh_info, q, k, v)  # reshard ONCE per layer
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if s > 1:
+        o = attn.flash_attention(q, k, v, causal=True, window=window)
+    else:
+        o = attn.reference_attention(q, k, v, causal=True, window=window)
+    o = jnp.einsum("bse,ed->bsd", o.reshape(b, s, H * hd), lp["wo"])
+    return o, (k, v)
+
+
+def _head_shard(cfg, mesh_info, q, k, v):
+    """Megatron-SP resharding point: with the residual sequence-sharded over
+    the model axis, force q/k/v to full-sequence / head-sharded layout HERE,
+    so the partitioner inserts one all-to-all per layer instead of
+    resharding inside every flash kv-chunk iteration (§Perf iteration 1:
+    395 GB → per-layer reshard on tinyllama train_4k)."""
+    if mesh_info is None or mesh_info.mesh is None:
+        return q, k, v
+    dp = mesh_info.data_axes
+    if mesh_info.model_axis in dp:  # dp policy: no TP resharding needed
+        return q, k, v
+    p = mesh_info.model_size
+    mesh = mesh_info.mesh
+    qs = "model" if q.shape[2] % p == 0 else None
+    ks = "model" if k.shape[2] % p == 0 else None
+    q = lax.with_sharding_constraint(q, NamedSharding(mesh, P(dp, None, qs, None)))
+    k = lax.with_sharding_constraint(k, NamedSharding(mesh, P(dp, None, ks, None)))
+    v = lax.with_sharding_constraint(v, NamedSharding(mesh, P(dp, None, ks, None)))
+    return q, k, v
+
+
+def _mlp_block(cfg, lp, h, mesh_info):
+    if not cfg.moe_experts:
+        g = jnp.einsum("bsd,df->bsf", h, lp["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", h, lp["w_up"])
+        hh = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
+        y = jnp.einsum("bsf,fd->bsd", hh, lp["w_down"])
+        return y, {}
+    mi = mesh_info if mesh_info is not None else moe_mod.MoEMeshInfo()
+    moe_params = {k: lp[k] for k in ("router", "w_gate", "w_up", "w_down")}
+    if mi.mesh is not None and mi.model_axis in mi.data_axes:
+        return moe_mod.moe_tp(moe_params, h, cfg)  # dp policy: all-local
+    if cfg.moe_experts >= mi.model_size and mi.mesh is not None and h.shape[1] > 1:
+        return moe_mod.moe_ep(moe_params, h, cfg, mi)
+    if cfg.moe_experts >= mi.model_size and mi.mesh is not None:
+        return moe_mod.moe_ep_decode(moe_params, h, cfg, mi)
+    if mi.mesh is not None:
+        return moe_mod.moe_tp_sharded(moe_params, h, cfg, mi)
+    return moe_mod.moe_tp(moe_params, h, cfg)
+
+
+def _block_train(cfg: ArchConfig, mesh_info, x, lp, positions):
+    x = _shard_residual(x, cfg, mesh_info, seq_shard=True)
+    h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    o, _ = _attention_block(
+        cfg, lp, h, positions, window=cfg.sliding_window, mesh_info=mesh_info
+    )
+    x = x + o
+    h2 = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    y, aux = _mlp_block(cfg, lp, h2, mesh_info)
+    return x + y, aux
+
+
+def _aux_zero(cfg):
+    if cfg.moe_experts:
+        return {
+            "lb_loss": jnp.zeros(()),
+            "z_loss": jnp.zeros(()),
+            "overflow": jnp.zeros((), bool),
+        }
+    return {}
+
+
+def _embed(cfg, params, tokens, extras):
+    x = params["embed"][tokens]  # (B, S, D)
+    if cfg.family == "vlm" and extras.get("patch_embeds") is not None:
+        pe = extras["patch_embeds"].astype(x.dtype)  # (B, vt, D)
+        vt = pe.shape[1]
+        pad = jnp.zeros((pe.shape[0], x.shape[1] - vt, pe.shape[2]), x.dtype)
+        mask = (jnp.arange(x.shape[1]) < vt)[None, :, None]
+        x = jnp.where(mask, jnp.concatenate([pe, pad], axis=1), x)
+    return x
+
+
+def forward_train(
+    cfg: ArchConfig,
+    params: Dict,
+    tokens: jnp.ndarray,
+    labels: jnp.ndarray,
+    mesh_info=None,
+    extras: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Dict]:
+    extras = extras or {}
+    b, s = tokens.shape
+    x = _embed(cfg, params, tokens, extras)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    block = functools.partial(_block_train, cfg, mesh_info)
+    if cfg.remat:
+        block = jax.checkpoint(block, static_argnums=())
+
+    def scan_body(x, lp):
+        x, aux = block(x, lp, positions)
+        return x, aux
+
+    x, auxs = lax.scan(scan_body, x, params["layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    mask = None
+    if cfg.family == "vlm":
+        mask = (jnp.arange(s) >= cfg.vision_tokens)[None, :] * jnp.ones((b, 1))
+    loss = next_token_loss(logits[:, :-1], labels[:, 1:], None if mask is None else mask[:, 1:])
+    aux = {k: (v.sum() if k != "overflow" else v.any()) for k, v in auxs.items()}
+    if cfg.moe_experts:
+        loss = loss + 0.01 * aux.get("lb_loss", 0.0) + 1e-3 * aux.get("z_loss", 0.0)
+    return loss, aux
+
+
+# ------------------------------------------------------------------ serve
+def prefill(
+    cfg: ArchConfig,
+    params: Dict,
+    tokens: jnp.ndarray,
+    mesh_info=None,
+    extras: Optional[Dict] = None,
+    cache_len: Optional[int] = None,
+) -> Tuple[Dict, jnp.ndarray]:
+    """Run the prompt, build the KV cache. Returns (cache, last logits)."""
+    extras = extras or {}
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    x = _embed(cfg, params, tokens, extras)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def scan_body(x, lp):
+        x = _shard_residual(x, cfg, mesh_info, seq_shard=True)
+        h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        o, (k, v) = _attention_block(
+            cfg, lp, h, positions, window=cfg.sliding_window, mesh_info=mesh_info
+        )
+        x = x + o
+        h2 = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        y, _ = _mlp_block(cfg, lp, h2, mesh_info)
+        pad = cache_len - s
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x + y, (kc, vc)
+
+    x, (kcache, vcache) = lax.scan(scan_body, x, params["layers"])
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    cache = {"k": kcache, "v": vcache, "pos": jnp.full((), s - 1, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Dict,
+    cache: Dict,
+    token: jnp.ndarray,  # (B,) previous token
+    mesh_info=None,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One autoregressive step; cache['pos'] is the last filled position."""
+    b = token.shape[0]
+    pos = cache["pos"] + 1  # position of the new token
+    x = params["embed"][token][:, None, :]  # (B,1,D)
+    positions = jnp.broadcast_to(pos[None], (b, 1))
+
+    def scan_body(x, inputs):
+        lp, kc, vc = inputs
+        h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q = jnp.einsum("bsd,de->bse", h, lp["wq"]).reshape(b, 1, H, hd)
+        k = jnp.einsum("bsd,de->bse", h, lp["wk"]).reshape(b, 1, KV, hd)
+        v = jnp.einsum("bsd,de->bse", h, lp["wv"]).reshape(b, 1, KV, hd)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        kc, vc = attn.cache_update(kc, vc, k, v, pos)
+        o = attn.decode_attention(q, kc, vc, pos, window=cfg.sliding_window)
+        o = jnp.einsum("bse,ed->bsd", o.reshape(b, 1, H * hd), lp["wo"])
+        x = x + o
+        h2 = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        y, _ = _mlp_block(cfg, lp, h2, mesh_info)
+        return x + y, (kc, vc)
+
+    x, (kcache, vcache) = lax.scan(
+        scan_body, x, (params["layers"], cache["k"], cache["v"])
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return logits, {"k": kcache, "v": vcache, "pos": pos}
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, cache_len: int):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    dt = dtype_of(cfg)
+    return {
+        "k": jax.ShapeDtypeStruct((cfg.n_layers, batch, cache_len, KV, hd), dt),
+        "v": jax.ShapeDtypeStruct((cfg.n_layers, batch, cache_len, KV, hd), dt),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

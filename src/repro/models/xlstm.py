@@ -1,0 +1,143 @@
+"""xLSTM LM: mLSTM blocks with an sLSTM block every ``slstm_every`` layers.
+
+Scan-over-layers is applied per block *kind* (two scans: the mLSTM stack
+dominates). Attention-free ⇒ O(1)-state decode ⇒ long_500k runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm
+from repro.models.layers import _dense, dtype_of, next_token_loss, rmsnorm
+
+
+def _layout(cfg: ArchConfig):
+    ks = cfg.slstm_every or (cfg.n_layers + 1)
+    slstm_ids = [i for i in range(cfg.n_layers) if (i + 1) % ks == 0]
+    mlstm_ids = [i for i in range(cfg.n_layers) if (i + 1) % ks != 0]
+    return mlstm_ids, slstm_ids
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array) -> Dict:
+    D, V = cfg.d_model, cfg.vocab
+    dt = dtype_of(cfg)
+    mids, sids = _layout(cfg)
+    ks = jax.random.split(rng, 4)
+    return {
+        "embed": _dense(ks[0], (V, D), D, dt),
+        "mlstm": {
+            "norm": jnp.ones((len(mids), D), dt),
+            "norm2": jnp.ones((len(mids), D), dt),
+            **ssm.init_mlstm(ks[1], cfg, len(mids)),
+        },
+        "slstm": {
+            "norm": jnp.ones((len(sids), D), dt),
+            "norm2": jnp.ones((len(sids), D), dt),
+            **ssm.init_slstm(ks[2], cfg, len(sids)),
+        },
+        "final_norm": jnp.ones((D,), dt),
+        "lm_head": _dense(ks[3], (D, V), D, dt),
+    }
+
+
+def _mlstm_block(cfg, x, lp, state=None):
+    h = rmsnorm(x, lp["norm"], cfg.norm_eps)
+    o, st = ssm.mlstm_core(
+        {k: lp[k] for k in ("wq", "wk", "wv", "wo", "w_i", "w_f", "b_i", "b_f")},
+        h,
+        cfg,
+        state,
+    )
+    x = x + o
+    h2 = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+    x = x + ssm.xlstm_proj({"up": lp["up"], "down": lp["down"]}, h2)
+    return x, st
+
+
+def _slstm_block(cfg, x, lp, state=None):
+    h = rmsnorm(x, lp["norm"], cfg.norm_eps)
+    o, st = ssm.slstm_core(
+        {k: lp[k] for k in ("w_zifo", "b_zifo", "wo")}, h, cfg, state
+    )
+    x = x + o
+    h2 = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+    x = x + ssm.xlstm_proj({"up": lp["up"], "down": lp["down"]}, h2)
+    return x, st
+
+
+def _stack(cfg, params, x, states=None):
+    """Run the interleaved stack; mLSTM scanned, sLSTM unrolled (few)."""
+    mids, sids = _layout(cfg)
+    new_m, new_s = [], []
+    # interleave in true layer order; mLSTM params indexed by position in mids
+    im = is_ = 0
+    for i in range(cfg.n_layers):
+        if i in sids:
+            lp = jax.tree.map(lambda a: a[is_], params["slstm"])
+            st = None if states is None else jax.tree.map(lambda a: a[is_], states["slstm"])
+            x, stn = _slstm_block(cfg, x, lp, st)
+            new_s.append(stn)
+            is_ += 1
+        else:
+            lp = jax.tree.map(lambda a: a[im], params["mlstm"])
+            st = None if states is None else jax.tree.map(lambda a: a[im], states["mlstm"])
+            x, stn = _mlstm_block(cfg, x, lp, st)
+            new_m.append(stn)
+            im += 1
+    pack = lambda lst: jax.tree.map(lambda *xs: jnp.stack(xs), *lst) if lst else ()
+    return x, {"mlstm": pack(new_m), "slstm": pack(new_s)}
+
+
+def forward_train(cfg, params, tokens, labels, mesh_info=None, extras=None):
+    x = params["embed"][tokens]
+    x, _ = _stack(cfg, params, x)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return next_token_loss(logits[:, :-1], labels[:, 1:]), {}
+
+
+def prefill(cfg, params, tokens, mesh_info=None, extras=None, cache_len=None):
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x, states = _stack(cfg, params, x)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    states["pos"] = jnp.full((), s - 1, jnp.int32)
+    return states, logits
+
+
+def decode_step(cfg, params, cache, token, mesh_info=None):
+    x = params["embed"][token][:, None, :]
+    x, states = _stack(cfg, params, x, states=cache)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    states["pos"] = cache["pos"] + 1
+    return logits, states
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, cache_len: int):
+    del cache_len  # O(1) state — the whole point of the SSM family
+    mids, sids = _layout(cfg)
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+    nm, ns = len(mids), len(sids)
+    f32 = jnp.float32
+    return {
+        "mlstm": (
+            jax.ShapeDtypeStruct((nm, batch, H, hd, hd), f32),
+            jax.ShapeDtypeStruct((nm, batch, H, hd), f32),
+            jax.ShapeDtypeStruct((nm, batch, H), f32),
+        ),
+        "slstm": (
+            jax.ShapeDtypeStruct((ns, batch, D), f32),
+            jax.ShapeDtypeStruct((ns, batch, D), f32),
+            jax.ShapeDtypeStruct((ns, batch, D), f32),
+        ),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,2 @@
+from repro.optim.adamw import OptConfig, apply_updates, global_norm, init_state, schedule  # noqa: F401
+from repro.optim import compress  # noqa: F401

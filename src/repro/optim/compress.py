@@ -1,0 +1,67 @@
+"""Gradient compression for the cross-pod (DCN) axis.
+
+int8 block-quantized all-reduce with stochastic rounding and error feedback:
+the residual of each quantization is fed back into the next step's gradient,
+so the compression is unbiased in the long run (standard EF-SGD argument).
+Intended for the ``pod`` axis only — intra-pod ICI is fast enough for bf16.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8(x: jnp.ndarray, rng: jax.Array) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise symmetric int8 quantization with stochastic rounding."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    y = blocks / scale
+    noise = jax.random.uniform(rng, y.shape) - 0.5
+    q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_tree(grads: Any, errors: Any, rng: jax.Array):
+    """Apply error feedback then quantize every leaf.
+
+    Returns (quantized tree of (q, scale), new error tree).
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(errors) if errors is not None else [0.0] * len(leaves)
+    qs, new_errs = [], []
+    for i, (g, e) in enumerate(zip(leaves, err_leaves)):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected, jax.random.fold_in(rng, i))
+        deq = dequantize_int8(q, s, g.shape)
+        qs.append((q, s))
+        new_errs.append(corrected - deq)
+    return jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, new_errs)
+
+
+def decompress_tree(qtree: Any, like: Any) -> Any:
+    return jax.tree.map(
+        lambda qs, g: dequantize_int8(qs[0], qs[1], g.shape).astype(g.dtype),
+        qtree,
+        like,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+    )
+
+
+def init_errors(grads_shape: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_shape)

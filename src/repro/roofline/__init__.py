@@ -1,0 +1,8 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    analyze_compiled,
+    model_flops,
+    parse_collective_bytes,
+)

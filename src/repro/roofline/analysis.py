@@ -1,0 +1,352 @@
+"""Roofline term derivation from the compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), in seconds (§Roofline):
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = Σ collective_bytes_per_device / ICI_BW
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (we charge the aggregate of one link; multi-link overlap is a schedule
+property the §Perf loop exploits, not an accounting assumption).
+
+`cost_analysis` caveat (measured, see EXPERIMENTS.md §Dry-run notes): XLA
+counts a `while` (scan-over-layers) body ONCE. We therefore scale
+flops/bytes/collectives by the scan trip count parsed from the HLO when the
+known-trip-count pattern is detectable, and always report the analytic
+MODEL_FLOPS = 6·N_active·D alongside (their ratio flags both remat recompute
+and undercounting).
+
+Collective bytes are parsed from the post-SPMD optimized HLO text: per op we
+take operand bytes × a schedule factor (ring algorithms):
+    all-gather: (g-1)·operand   (operand = per-device shard; g = group size)
+    reduce-scatter: operand·(g-1)/g
+    all-reduce: 2·operand·(g-1)/g
+    all-to-all / collective-permute: operand
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Optional
+
+import numpy as np
+
+# TPU v5e per-chip constants
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "bf16": 2,
+    "f16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(tok_dtype, 4)
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    """computation name -> list of op lines (flat text parse)."""
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                comps["__entry__"] = comps[cur]
+                comps.setdefault("__entry_name__", []).append(cur)
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _execution_multipliers(comps: Dict[str, list]) -> Dict[str, float]:
+    """Times each computation executes per step (while trip counts compose)."""
+    entry = comps.get("__entry_name__", [None])[0]
+    mult: Dict[str, float] = defaultdict(float)
+    if entry is None:
+        return defaultdict(lambda: 1.0)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    while order:
+        c = order.pop(0)
+        for line in comps.get(c, []):
+            trip = 1.0
+            tm = _TRIP_RE.search(line)
+            if tm and " while(" in line:
+                trip = float(tm.group(1))
+            callees = []
+            bm = _BODY_RE.search(line)
+            if bm:
+                callees.append((bm.group(1), trip))
+            cm = _COND_RE.search(line)
+            if cm:
+                callees.append((cm.group(1), trip))
+            am = _CALL_RE.search(line)
+            if am:
+                callees.append((am.group(1), 1.0))
+            for name, t in callees:
+                if name in comps:
+                    mult[name] += mult[c] * t
+                    if name not in seen:
+                        seen.add(name)
+                        order.append(name)
+    return mult
+
+
+def _line_collective_bytes(line: str, default_group: int):
+    """Moved-bytes estimate from the op's RESULT type (operands print as
+    bare names in optimized HLO). Ring-schedule factors per kind."""
+    m = _COLL_RE.match(line)
+    if not m or "-done(" in line:
+        return None
+    kind = m.group(2)
+    shapes = _SHAPE_RE.findall(m.group(1))  # the result type segment
+    result_bytes = sum(_shape_bytes(d, s) for d, s in shapes)
+    g = default_group
+    gm = _GROUPS_RE.search(line)
+    gi = _GROUPS_IOTA_RE.search(line)
+    if gm:
+        ids = [x for x in gm.group(1).split(",") if x.strip() != ""]
+        g = max(len(ids), 1)
+    elif gi:
+        g = max(int(gi.group(2)), 1)  # replica_groups=[n_groups,group_size]
+    if g <= 1:
+        return kind, 0.0
+    if kind == "all-gather":
+        moved = result_bytes * (g - 1) / g  # result = full gathered array
+    elif kind == "all-reduce":
+        moved = 2.0 * result_bytes * (g - 1) / g
+    elif kind == "reduce-scatter":
+        moved = result_bytes * (g - 1)  # result = 1/g of the input
+    elif kind == "all-to-all":
+        moved = result_bytes * (g - 1) / g
+    else:  # collective-permute
+        moved = result_bytes
+    return kind, moved
+
+
+def parse_collective_bytes(hlo_text: str, default_group: int) -> Dict[str, float]:
+    """Per-device collective bytes by op kind, schedule-factored and scaled
+    by while-loop trip counts (scan bodies execute L times, not once)."""
+    comps = _split_computations(hlo_text)
+    mult = _execution_multipliers(comps)
+    out: Dict[str, float] = defaultdict(float)
+    for name, lines in comps.items():
+        if name.startswith("__entry"):
+            continue
+        f = mult.get(name, 1.0) or 1.0
+        for line in lines:
+            r = _line_collective_bytes(line, default_group)
+            if r:
+                out[r[0]] += r[1] * f
+    return dict(out)
+
+
+_DOT_RE = re.compile(r"=\s*(\S+)\s+dot\(")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
+_OPERANDS_RE = re.compile(r"dot\(([^)]*)\)")
+
+
+def _op_shapes(hlo_text: str) -> Dict[str, tuple]:
+    """op name -> (dtype, dims list) from every definition line."""
+    out = {}
+    for line in hlo_text.splitlines():
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        rest = line[dm.end() :]
+        sm = _SHAPE_RE.match(rest.strip())
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            out[dm.group(1)] = (sm.group(1), dims)
+    return out
+
+
+def parse_dot_stats(hlo_text: str) -> Dict[str, float]:
+    """Exact per-device matmul FLOPs and HBM traffic from the optimized HLO.
+
+    flops(dot) = 2 · prod(result dims) · prod(lhs contracting dims), each op
+    scaled by its computation's execution multiplier (while trip counts).
+    Operand shapes are resolved through a name→type map (operands print as
+    bare names). bytes = operands + result of every dot — a lower-bound HBM
+    traffic proxy for matmul-dominated graphs. This is the trip-correct
+    counterpart of `cost_analysis`, which prices a while body once.
+    """
+    comps = _split_computations(hlo_text)
+    mult = _execution_multipliers(comps)
+    shapes_by_name = _op_shapes(hlo_text)
+    flops = 0.0
+    bytes_ = 0.0
+    for name, lines in comps.items():
+        if name.startswith("__entry"):
+            continue
+        f = mult.get(name, 1.0) or 1.0
+        for line in lines:
+            dm = _DOT_RE.search(line)
+            if not dm:
+                continue
+            res = _SHAPE_RE.search(line.split("=", 1)[-1])
+            if not res:
+                continue
+            res_dims = [int(d) for d in res.group(2).split(",") if d]
+            res_n = float(np.prod(res_dims)) if res_dims else 1.0
+            om = _OPERANDS_RE.search(line)
+            lhs_shape = None
+            op_bytes = _shape_bytes(res.group(1), res.group(2))
+            if om:
+                names = [o.strip().split(" ")[-1] for o in om.group(1).split(",")]
+                for i, nm in enumerate(names[:2]):
+                    sh = shapes_by_name.get(nm)
+                    if sh:
+                        op_bytes += _shape_bytes(sh[0], ",".join(map(str, sh[1])))
+                        if i == 0:
+                            lhs_shape = sh[1]
+            k = 1.0
+            cm = _LHS_C_RE.search(line)
+            if cm and lhs_shape:
+                for c in cm.group(1).split(","):
+                    if c != "" and int(c) < len(lhs_shape):
+                        k *= lhs_shape[int(c)]
+            flops += f * 2.0 * res_n * k
+            bytes_ += f * op_bytes
+    return {"dot_flops": flops, "dot_bytes": bytes_}
+
+
+def scan_trip_factor(hlo_text: str) -> float:
+    """Largest known trip count of any while loop (scan-over-layers)."""
+    trips = [int(t) for t in _TRIP_RE.findall(hlo_text)]
+    return float(max(trips)) if trips else 1.0
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D tokens for train, 2·N_active·D for
+    inference (per generated/prefilled token)."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * n_active * tokens
+
+
+def analyze_compiled(compiled, *, mesh, cfg, shape) -> Dict:
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    info: Dict = {"devices": n_dev}
+
+    # ---- memory analysis (per device)
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            info["mem_args_gb"] = round(ma.argument_size_in_bytes / 2**30, 3)
+            info["mem_output_gb"] = round(ma.output_size_in_bytes / 2**30, 3)
+            info["mem_temp_gb"] = round(ma.temp_size_in_bytes / 2**30, 3)
+            info["mem_total_gb"] = round(
+                (
+                    ma.argument_size_in_bytes
+                    + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes
+                )
+                / 2**30,
+                3,
+            )
+    except Exception as e:  # CPU backend may not implement it
+        info["mem_note"] = f"memory_analysis unavailable: {type(e).__name__}"
+
+    # ---- cost analysis
+    flops = bytes_accessed = None
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        if ca:
+            flops = float(ca.get("flops", 0.0))
+            bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:
+        info["cost_note"] = f"cost_analysis unavailable: {type(e).__name__}"
+
+    # ---- HLO text: collectives + scan trip correction
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    trip = scan_trip_factor(text)
+    coll = parse_collective_bytes(text, default_group=mesh.shape.get("model", 1))
+    coll_total = sum(coll.values())
+    dots = parse_dot_stats(text)
+
+    info["hlo_flops_per_dev"] = flops  # cost_analysis (while bodies ×1)
+    info["hlo_bytes_per_dev"] = bytes_accessed
+    info["dot_flops_per_dev"] = dots["dot_flops"]  # trip-corrected
+    info["dot_bytes_per_dev"] = dots["dot_bytes"]
+    info["scan_trip"] = trip
+    info["collectives"] = {k: round(v / 2**20, 2) for k, v in coll.items()}
+    info["collective_mb_per_dev"] = round(coll_total / 2**20, 2)
+
+    mf = model_flops(cfg, shape)
+    info["model_flops_total"] = mf
+    per_dev_model = mf / n_dev
+
+    # roofline terms (seconds)
+    t_compute = max(dots["dot_flops"], flops or 0.0) / PEAK_FLOPS
+    t_compute_model = per_dev_model / PEAK_FLOPS
+    t_memory = max(dots["dot_bytes"], bytes_accessed or 0.0) / HBM_BW
+    t_coll = coll_total / ICI_BW
+    info["t_compute_s"] = t_compute
+    info["t_compute_model_s"] = t_compute_model
+    info["t_memory_s"] = t_memory
+    info["t_collective_s"] = t_coll
+    terms = {
+        "compute": max(t_compute, t_compute_model),
+        "memory": t_memory,
+        "collective": t_coll,
+    }
+    info["dominant"] = max(terms, key=terms.get)
+    if dots["dot_flops"]:
+        info["useful_flops_ratio"] = round(per_dev_model / dots["dot_flops"], 4)
+    # roofline fraction: useful work time over the achievable bound (sum of
+    # terms — conservative no-overlap model; overlap is a §Perf lever)
+    bound = t_compute + t_memory + t_coll
+    if bound > 0:
+        info["roofline_fraction"] = round(t_compute_model / bound, 4)
+    return info

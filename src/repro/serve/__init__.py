@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeConfig, ServeEngine  # noqa: F401
+from repro.serve.sampling import sample, top_k_logits  # noqa: F401

@@ -1,0 +1,71 @@
+"""Batched serving engine: continuous-batching decode loop over a KV cache.
+
+Single-host reference implementation of the serving driver the dry-run
+lowers: ``prefill`` builds the cache for a batch of prompts, ``ServeEngine``
+then steps all sequences in lockstep, sampling with serve/sampling.py and
+retiring sequences on EOS (a retired slot keeps decoding into a scratch
+token — the static-shape analogue of slot reuse; a production scheduler
+refills retired slots from the admission queue between steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import Model
+from repro.serve.sampling import sample
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 1.0
+    top_k: int = 40
+    top_p: float = 0.0
+    eos_id: int = 2
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, serve_cfg: ServeConfig, mesh=None):
+        self.model = model
+        self.params = params
+        self.scfg = serve_cfg
+        self.mesh = mesh
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t, None)
+        )
+
+    def generate(self, prompts: jnp.ndarray, extras: Optional[Dict] = None, rng=None):
+        """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32."""
+        rng = rng if rng is not None else jax.random.key(0)
+        b, s = prompts.shape
+        cache_len = s + self.scfg.max_new_tokens
+        batch = {"tokens": prompts, **(extras or {})}
+        cache, logits = self.model.prefill(self.params, batch, cache_len=cache_len)
+        outs: List[jnp.ndarray] = []
+        done = jnp.zeros((b,), bool)
+        tok = sample(
+            logits,
+            rng,
+            temperature=self.scfg.temperature,
+            top_k=self.scfg.top_k,
+            top_p=self.scfg.top_p,
+        )
+        for i in range(self.scfg.max_new_tokens):
+            outs.append(jnp.where(done, self.scfg.eos_id, tok))
+            done = done | (tok == self.scfg.eos_id)
+            logits, cache = self._decode(self.params, cache, tok)
+            rng = jax.random.fold_in(rng, i)
+            tok = sample(
+                logits,
+                rng,
+                temperature=self.scfg.temperature,
+                top_k=self.scfg.top_k,
+                top_p=self.scfg.top_p,
+            )
+        return jnp.stack(outs, axis=1)

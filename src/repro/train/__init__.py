@@ -1,0 +1,2 @@
+from repro.train.train_step import init_all, make_train_step, train_step  # noqa: F401
+from repro.train import checkpoint, elastic  # noqa: F401

@@ -1,0 +1,61 @@
+"""BSP (p, L, g) cost model — reproduces the paper's §6 analytics."""
+import math
+
+import pytest
+
+from repro.core import BSPMachine, CRAY_T3D, SortConfig, predict
+
+
+def _machine(p):
+    L, g = CRAY_T3D[p]
+    return BSPMachine(p=p, L=L, g=g)
+
+
+@pytest.mark.parametrize("p", [16, 32, 64, 128])
+def test_predictions_are_sane(p):
+    cfg = SortConfig(p=p, n_per_proc=(8 << 20) // p, algorithm="det")
+    pred = predict(cfg, _machine(p))
+    assert 0 < pred.efficiency <= 1.0
+    assert pred.pi >= 1.0  # can't beat the sequential comparison count
+    assert pred.speedup <= p
+
+
+def test_paper_efficiency_claim_8m_128():
+    """Paper §6.4: for n=8M, p=128 the theoretical efficiency bound is ≈66%
+    for [DSQ] and observed 63-67%; the randomized observed 78-83%."""
+    n = 8 << 20
+    det = predict(SortConfig(p=128, n_per_proc=n // 128, algorithm="det"), _machine(128))
+    assert 0.55 <= det.efficiency <= 0.85, det.efficiency
+    ran = predict(SortConfig(p=128, n_per_proc=n // 128, algorithm="iran"), _machine(128))
+    assert ran.efficiency >= det.efficiency * 0.9
+
+
+def test_communication_efficiency_ordering():
+    """One-round sample sort must beat Θ(lg²p)-round bitonic in μ terms:
+    routed words per proc ~ n_max for det vs ~ lg²p·n/p for [BSI]."""
+    p, n_p = 64, 1 << 17
+    det = predict(SortConfig(p=p, n_per_proc=n_p, algorithm="det"), _machine(p))
+    # bitonic communication: lg p (lg p + 1)/2 rounds of n_p words
+    lgp = math.log2(p)
+    bitonic_words = lgp * (lgp + 1) / 2 * n_p
+    det_words = SortConfig(p=p, n_per_proc=n_p, algorithm="det").n_max
+    assert det_words < bitonic_words / 3
+
+
+def test_seq_fraction_matches_paper():
+    """Paper §6.4: sequential phases (sort+merge) account for 85-90%+ of
+    runtime on the T3D — the cost model must reproduce that balance."""
+    p = 64
+    cfg = SortConfig(p=p, n_per_proc=(32 << 20) // p, algorithm="iran")
+    pred = predict(cfg, _machine(p))
+    seq = pred.per_phase["SeqSort"] + pred.per_phase["Merging"]
+    assert seq / pred.seconds_total >= 0.80
+
+
+def test_nmax_formula_matches_lemma():
+    cfg = SortConfig(p=8, n_per_proc=1024, algorithm="det", pad_align=1, capacity_factor=1.0)
+    r = cfg.r
+    x = cfg.segment_len
+    assert cfg.n_max == (cfg.s + cfg.p - 1) * x  # exact proof-side bound
+    loose = (1 + 1 / r) * cfg.n_per_proc + r * cfg.p
+    assert cfg.n_max <= loose * 1.3

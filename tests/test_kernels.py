@@ -1,0 +1,83 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bitonic import ops as bops, ref as bref
+from repro.kernels.merge_path import ops as mops, ref as mref
+from repro.kernels.searchsorted import ops as sops, ref as sref
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32, np.float32])
+@pytest.mark.parametrize("shape", [(1, 17), (5, 100), (8, 1000), (3, 4096), (2, 16384)])
+def test_bitonic_sort_sweep(dtype, shape):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 2**20, shape).astype(dtype))
+    assert np.array_equal(bops.sort(x), bref.sort(x))
+
+
+def test_bitonic_sort_bf16():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((4, 333)).astype(np.float32)).astype(jnp.bfloat16)
+    assert np.array_equal(np.asarray(bops.sort(x)), np.asarray(bref.sort(x)))
+
+
+def test_bitonic_multi_tile():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.integers(0, 2**31, (2, 40000)).astype(np.int32))
+    assert np.array_equal(bops.sort(x), bref.sort(x))
+
+
+def test_bitonic_kv_multiset_and_permutation():
+    rng = np.random.default_rng(3)
+    k = jnp.asarray(rng.integers(0, 50, (4, 500)).astype(np.int32))
+    v = jnp.arange(4 * 500, dtype=jnp.int32).reshape(4, 500)
+    ko, vo = bops.sort_kv(k, v)
+    kr, _ = bref.sort_kv(k, v)
+    assert np.array_equal(ko, kr)
+    for r in range(4):  # values remain a permutation consistent with keys
+        assert np.array_equal(np.asarray(k)[r][np.asarray(vo)[r] % 500], np.asarray(ko)[r])
+
+
+@pytest.mark.parametrize("na,nb", [(100, 200), (1000, 1000), (17, 4096), (1, 1)])
+def test_merge_sweep(na, nb):
+    rng = np.random.default_rng(4)
+    a = jnp.sort(jnp.asarray(rng.integers(0, 1000, (3, na)).astype(np.int32)), axis=-1)
+    b = jnp.sort(jnp.asarray(rng.integers(0, 1000, (3, nb)).astype(np.int32)), axis=-1)
+    assert np.array_equal(mops.merge(a, b), mref.merge(a, b))
+
+
+@pytest.mark.parametrize("n,s", [(100, 3), (1000, 7), (5000, 31), (2048, 255)])
+def test_searchsorted_sweep(n, s):
+    rng = np.random.default_rng(5)
+    x = jnp.sort(jnp.asarray(rng.integers(0, 50, n).astype(np.int32)))
+    sk = jnp.asarray(rng.integers(0, 50, s).astype(np.int32))
+    sp = jnp.asarray(rng.integers(0, 8, s).astype(np.int32))
+    si = jnp.asarray(rng.integers(0, n, s).astype(np.int32))
+    me = jnp.asarray(3, jnp.int32)
+    got = sops.splitter_ranks(x, sk, sp, si, me)
+    want = sref.splitter_ranks(x, sk, sp, si, me)
+    assert np.array_equal(got, want)
+
+
+@given(
+    st.integers(min_value=1, max_value=8),
+    st.integers(min_value=2, max_value=2048),
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_bitonic_hypothesis(rows, width, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-1000, 1000, (rows, width)).astype(np.int32))
+    assert np.array_equal(bops.sort(x), bref.sort(x))
+
+
+@given(st.integers(min_value=1, max_value=1024), st.integers(min_value=0, max_value=10**6))
+def test_merge_hypothesis(width, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.sort(jnp.asarray(rng.standard_normal((2, width)).astype(np.float32)), axis=-1)
+    b = jnp.sort(jnp.asarray(rng.standard_normal((2, width)).astype(np.float32)), axis=-1)
+    assert np.array_equal(mops.merge(a, b), mref.merge(a, b))

@@ -1,0 +1,76 @@
+"""Property-based tests (hypothesis) for the sorting system's invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SortConfig, bsp_sort, gathered_output
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+@st.composite
+def sort_instances(draw):
+    p = draw(st.sampled_from([2, 4, 8]))
+    n_p = draw(st.integers(min_value=8, max_value=512))
+    algo = draw(st.sampled_from(["det", "iran", "bitonic"]))
+    kind = draw(st.sampled_from(["uniform", "dups", "sorted", "reverse", "const"]))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        x = rng.integers(-(2**31), 2**31, (p, n_p), dtype=np.int64).astype(np.int32)
+    elif kind == "dups":
+        x = rng.integers(0, 5, (p, n_p)).astype(np.int32)
+    elif kind == "sorted":
+        x = np.sort(rng.integers(0, 1000, (p, n_p)).astype(np.int32), axis=None).reshape(p, n_p)
+    elif kind == "reverse":
+        x = np.sort(rng.integers(0, 1000, (p, n_p)).astype(np.int32), axis=None)[::-1].reshape(p, n_p).copy()
+    else:
+        x = np.full((p, n_p), 7, np.int32)
+    return x, algo
+
+
+@given(sort_instances())
+def test_output_is_sorted_permutation(inst):
+    x, algo = inst
+    res, _ = bsp_sort(jnp.asarray(x), algorithm=algo)
+    assert not bool(res.overflow)
+    out = gathered_output(res)
+    assert np.array_equal(out, np.sort(x.reshape(-1)))
+
+
+@given(
+    st.sampled_from([2, 4, 8]),
+    st.integers(min_value=64, max_value=1024),
+    st.floats(min_value=1.0, max_value=8.0),
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_capacity_bound_holds_for_any_omega(p, n_p, omega, seed):
+    """Lemma 5.1 is an *a priori* bound: for any ω and any input, the routed
+    receive count never exceeds cfg.n_max for the deterministic algorithm."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 50, (p, n_p)).astype(np.int32)  # heavy duplicates
+    cfg = SortConfig(p=p, n_per_proc=n_p, algorithm="det", omega=omega)
+    res, _ = bsp_sort(jnp.asarray(x), cfg)
+    assert int(np.max(np.asarray(res.count))) <= cfg.n_max
+    assert not bool(res.overflow)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+def test_float_keys(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((4, 256)).astype(np.float32)
+    res, _ = bsp_sort(jnp.asarray(x), algorithm="det")
+    out = gathered_output(res)
+    assert np.array_equal(out, np.sort(x.reshape(-1)))
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+def test_distribution_independence_det(seed):
+    """The deterministic algorithm's receive counts depend only on key
+    *ranks*: applying a strictly monotone transform leaves counts equal."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 10**6, (4, 256)).astype(np.int32)
+    res1, _ = bsp_sort(jnp.asarray(x), algorithm="det")
+    res2, _ = bsp_sort(jnp.asarray(x * 2 + 1), algorithm="det")
+    assert np.array_equal(np.asarray(res1.count), np.asarray(res2.count))

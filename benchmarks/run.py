@@ -62,6 +62,8 @@ def main() -> None:
     go("bsi", tables.table_bsi_baseline, M // 4)
     go("bsp_model", tables.table_bsp_model_validation, n_3 if not args.full else 8 * M)
     go("duplicates", tables.table_duplicate_handling_overhead, M // 4)
+    go("capacity", tables.table_capacity_retry, M // 4 if not args.full else 4 * M,
+       p=16 if not args.full else 64)
 
 
 if __name__ == "__main__":

@@ -18,7 +18,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SortConfig, bsp_sort, datagen, gathered_output, phase_fns, predict
+from repro.core import (
+    SortConfig,
+    TierStats,
+    bsp_sort,
+    bsp_sort_safe,
+    datagen,
+    gathered_output,
+    phase_fns,
+    predict,
+)
 from benchmarks.common import emit, predicted_t3d, seq_sort_time, t_comp_per_cmp, timeit
 
 VARIANTS = {
@@ -189,6 +198,42 @@ def table_bsp_model_validation(n, ps=(16, 32, 64, 128)):
                     "observed_imbalance": round(imb, 4),
                     "theory_imbalance_bound": round(theoretical_max_imbalance(cfg), 3),
                 },
+            )
+
+
+def table_capacity_retry(n, p=16, variants=("RSQ", "DSQ")):
+    """Capacity-tier retry profile: how often w.h.p. capacity suffices.
+
+    Production setting (pair_capacity="whp") through the overflow-safe
+    driver, per §6.3 input set plus [ADV] — the adversarial
+    all-keys-to-one-bucket input (each proc's run constant) that no w.h.p.
+    bound survives. Row = per-tier attempt counters + the tier that finally
+    served the sort + wall time including retries.
+    """
+    n_p = n // p
+    adv = np.repeat((np.arange(p, dtype=np.int32) * (2**20))[:, None], n_p, axis=1)
+    for v in variants:
+        for dist in DISTS + ["ADV"]:
+            cfg = SortConfig(
+                p=p, n_per_proc=n_p, routing="a2a_dense", pair_capacity="whp",
+                **VARIANTS[v],
+            )
+            x = jnp.asarray(adv) if dist == "ADV" else jnp.asarray(
+                datagen.generate(dist, p, n_p, seed=21)
+            )
+            bsp_sort_safe(x, cfg)  # warm: compile every tier this input visits
+            stats = TierStats()
+            t0 = time.time()
+            res, _, stats = bsp_sort_safe(x, cfg, stats=stats)
+            wall = time.time() - t0  # sort + retries, compiles amortized
+            ok = np.array_equal(
+                gathered_output(res), np.sort(np.asarray(x).reshape(-1))
+            )
+            emit(
+                "capacity",
+                {"variant": v, "dist": dist, "n": n, "p": p,
+                 "served_by": stats.last_tier, "complete": ok,
+                 "wall_s": round(wall, 4), **stats.as_row()},
             )
 
 

@@ -32,3 +32,13 @@ jax.block_until_ready(out)
 dt = time.perf_counter() - t0
 print(f"steady-state: {out.size / dt:,.0f} tok/s")
 print("sample row:", out[0][:12].tolist())
+
+# admission ordering: a burst of identical-length requests is the sort's
+# adversarial one-bucket case — the overflow-safe driver escalates capacity
+# tiers instead of dropping request ids.
+import numpy as np
+
+queue_lens = np.full(1024, 512, np.int32)
+order = engine.admission_order(queue_lens)
+print(f"admission order intact: {sorted(order.tolist()) == list(range(1024))}; "
+      f"capacity stats: {engine.capacity_stats.as_row()}")

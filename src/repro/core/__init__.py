@@ -4,11 +4,23 @@ Public API:
     SortConfig, SortResult        — configuration / result types
     bsp_sort                      — simulated-processor runner (vmap)
     bsp_sort_sharded              — real-device runner (shard_map)
+    bsp_sort_safe / _sharded_safe — overflow-safe drivers (capacity-tier
+                                    escalation ladder; no key ever dropped)
+    TierStats                     — per-tier retry counters for the drivers
     phase_fns                     — per-phase callables (paper Tables 4-7)
     predict, BSPMachine, CRAY_T3D — BSP (p, L, g) cost model (§1.1, Props 5.1/5.3)
     datagen                       — §6.3 benchmark input distributions
 """
-from .api import bsp_sort, bsp_sort_sharded, gathered_output, phase_fns, spmd_sort_fn
+from .api import (
+    TierStats,
+    bsp_sort,
+    bsp_sort_safe,
+    bsp_sort_sharded,
+    bsp_sort_sharded_safe,
+    gathered_output,
+    phase_fns,
+    spmd_sort_fn,
+)
 from .bsp import BSPMachine, CRAY_T3D, Prediction, predict, theoretical_max_imbalance
 from .types import AXIS, SortConfig, SortResult, sentinel_for
 
@@ -21,8 +33,11 @@ __all__ = [
     "Prediction",
     "SortConfig",
     "SortResult",
+    "TierStats",
     "bsp_sort",
+    "bsp_sort_safe",
     "bsp_sort_sharded",
+    "bsp_sort_sharded_safe",
     "datagen",
     "gathered_output",
     "phase_fns",

@@ -43,7 +43,7 @@ def sort_bitonic_spmd(
     xs, _ = local_sort(x, cfg.local_sort)
     for i in range(lgp):
         for j in range(i, -1, -1):
-            other = prim.exchange_with(xs, 1 << j, axis)
+            other = prim.exchange_with(xs, 1 << j, axis, p=p)
             up = ((me >> (i + 1)) & 1) == 0
             lower_half = ((me >> j) & 1) == 0
             keep_low = jnp.equal(up, lower_half)

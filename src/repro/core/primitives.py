@@ -23,7 +23,36 @@ def proc_id(axis: str) -> jnp.ndarray:
 
 
 def nprocs(axis: str) -> int:
-    return lax.axis_size(axis)
+    """Static size of the named processor axis.
+
+    ``lax.axis_size`` only exists on newer JAX; on 0.4.x the portable idiom
+    is ``psum`` of a unit constant, which both vmap and shard_map constant-
+    fold to a Python int at trace time. Collectives that build permutation
+    tables prefer an explicitly threaded static ``p`` (see ``ppermute_shift``
+    / ``exchange_with``) so they never depend on this trace-time folding.
+    """
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    return lax.psum(1, axis)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` (replication checks off).
+
+    ``jax.shard_map(..., check_vma=...)`` on newer JAX; the pinned 0.4.37
+    only has ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+    Every real-device entry point (core/api.py, models/moe.py) goes through
+    this wrapper so the collective layer has exactly one version seam.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
 
 
 def broadcast_from(x: jnp.ndarray, src: int, axis: str) -> jnp.ndarray:
@@ -51,18 +80,22 @@ def prefix_counts(local_counts: jnp.ndarray, axis: str) -> jnp.ndarray:
     return jnp.sum(jnp.where(mask, gathered, 0), axis=0)
 
 
-def ppermute_shift(x, axis: str, shift: int = 1):
-    """Rotate values around the ring by ``shift`` (one superstep)."""
-    p = nprocs(axis)
+def ppermute_shift(x, axis: str, shift: int = 1, *, p: int | None = None):
+    """Rotate values around the ring by ``shift`` (one superstep).
+
+    ``p`` is the static axis size; callers thread it from their SortConfig
+    (the permutation table must be built at trace time).
+    """
+    p = nprocs(axis) if p is None else p
     perm = [(i, (i + shift) % p) for i in range(p)]
     if isinstance(x, (tuple, list)):
         return type(x)(lax.ppermute(v, axis, perm) for v in x)
     return lax.ppermute(x, axis, perm)
 
 
-def exchange_with(x, partner_xor: int, axis: str):
+def exchange_with(x, partner_xor: int, axis: str, *, p: int | None = None):
     """Pairwise exchange with the XOR partner (bitonic compare-split step)."""
-    p = nprocs(axis)
+    p = nprocs(axis) if p is None else p
     perm = [(i, i ^ partner_xor) for i in range(p)]
     if isinstance(x, (tuple, list)):
         return type(x)(lax.ppermute(v, axis, perm) for v in x)

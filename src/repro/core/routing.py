@@ -22,6 +22,27 @@ All schedules preserve source order: the receive buffer is compacted by
 (source proc, local index), which is what makes the final merge stable and
 the §5.1.1 duplicate handling free.
 
+Capacity-tier ladder & retry semantics
+--------------------------------------
+A sort may never drop keys, but every fixed-shape schedule above has a
+static capacity an adversarial input can exceed. Overflow is therefore
+*detected* here (pmax of send/receive counts vs pair_cap / n_max), carried
+out of the collective region as the ``overflow`` flag, and treated by the
+host-side driver (``api.bsp_sort_safe`` / ``api.bsp_sort_sharded_safe``) as
+a retriable fault: the driver re-runs the jitted sort at the next rung of
+``SortConfig.tier_ladder()`` —
+
+    whp        Claim 5.1 w.h.p. pair capacity (production default)
+    whp2       the same bound Chernoff-scaled ×2
+    exact      pair_cap = n/p; Lemma 5.1 receive bound (det: a priori safe)
+    allgather  reference schedule, full-size (n) receive buffer — cannot
+               overflow for any input, so the ladder always terminates
+
+On a clean flag the partially-filled buffers of the failed attempt are
+discarded (nothing was written back), so retries are idempotent; per-tier
+attempt counters (``api.TierStats``) surface how often the cheap tier
+actually sufficed per workload.
+
 Values (payload arrays with leading dim n_p) ride along with the keys — this
 is the key-value form used by MoE token dispatch (models/moe.py).
 """
@@ -211,6 +232,6 @@ def _route_ring(x_sorted, boundaries, cfg, axis, values, sent):
             buf.at[dst].set(a[idx], mode="drop") for buf, a in zip(bufs, vis_arrs)
         ]
         if r != p - 1:
-            vis_arrs = prim.ppermute_shift(vis_arrs, axis, 1)
-            vis_b = prim.ppermute_shift(vis_b, axis, 1)
+            vis_arrs = prim.ppermute_shift(vis_arrs, axis, 1, p=p)
+            vis_b = prim.ppermute_shift(vis_b, axis, 1, p=p)
     return bufs[0], bufs[1:], jnp.minimum(total, cap), overflow

@@ -85,7 +85,7 @@ def sample_sort_bitonic(sample: Tagged, p: int, axis: str) -> Tagged:
     for i in range(lgp):
         for j in range(i, -1, -1):
             partner = 1 << j
-            other = prim.exchange_with(cur, partner, axis)
+            other = prim.exchange_with(cur, partner, axis, p=p)
             up = ((me >> (i + 1)) & 1) == 0
             lower_half = ((me >> j) & 1) == 0
             keep_low = jnp.equal(up, lower_half)

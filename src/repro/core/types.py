@@ -88,6 +88,9 @@ class SortConfig:
     # independent) or "whp" (Chernoff-scale n/p^2 bound; production setting,
     # overflow detected & surfaced as a retriable fault).
     pair_capacity: str = "exact"
+    # receive-buffer sizing: "bound" (Lemma/Claim 5.1 × capacity_factor) or
+    # "full" (= n — nothing can ever overflow; the ladder's terminal tier).
+    n_max_mode: str = "bound"
     seed: int = 0
 
     # ------------------------------------------------------------------ math
@@ -133,8 +136,12 @@ class SortConfig:
         det: exact bound from the Lemma 5.1 proof, b_{i+1}-b_i ≤ (s+p-1)·x
         (equivalently (1+1/⌈ω⌉)·n/p + ⌈ω⌉·p up to padding).
         iran/ran: Claim 5.1 w.h.p. bound (1+1/ω)·n/p, plus an ω·p slack term
-        absorbing splitter granularity.
+        absorbing splitter granularity. ``n_max_mode="full"`` overrides both
+        with n itself — an adversary cannot overflow a buffer that holds the
+        whole input (the escalation ladder's terminal tier).
         """
+        if self.n_max_mode == "full":
+            return round_up(self.n, self.pad_align)
         if self.algorithm == "det":
             bound = (self.s + self.p - 1) * self.segment_len
         else:
@@ -157,6 +164,49 @@ class SortConfig:
         cap = int(math.ceil(cap * self.capacity_factor))
         return min(round_up(max(cap, self.pad_align), self.pad_align), round_up(self.n_per_proc, self.pad_align))
 
+    # ------------------------------------------------------ capacity ladder
+    def tier_ladder(self) -> tuple:
+        """Capacity-escalation ladder for the overflow-safe driver.
+
+        ``((name, SortConfig), ...)`` ordered cheapest-first:
+
+        * ``whp``       — the configured w.h.p. pair capacity (Claim 5.1);
+        * ``whp2``      — the same bound Chernoff-scaled ×2 (squares the
+          already-polynomially-small failure probability);
+        * ``exact``     — pair_cap = n/p, receive side at the Lemma 5.1 /
+          Claim 5.1 bound — distribution independent for ``det``;
+        * ``allgather`` — reference schedule with a full-size (n) receive
+          buffer: no input, however adversarial, can overflow it.
+
+        Tiers below the configured starting point are omitted, so a config
+        that already starts exact gets the two-rung ladder exact→allgather.
+        ``bitonic`` is always perfectly balanced (n/p keys per proc at every
+        superstep) and needs no ladder at all.
+        """
+        if self.algorithm == "bitonic":
+            return (("exact", self),)
+        tiers = []
+        if (
+            self.routing == "a2a_dense"
+            and self.pair_capacity == "whp"
+            and self.n_max_mode == "bound"
+        ):
+            tiers.append(("whp", self))
+            tiers.append(
+                ("whp2", dataclasses.replace(self, capacity_factor=2.0 * self.capacity_factor))
+            )
+        if not (self.routing == "allgather" and self.n_max_mode == "full"):
+            tiers.append(("exact", dataclasses.replace(self, pair_capacity="exact")))
+        tiers.append(
+            (
+                "allgather",
+                dataclasses.replace(
+                    self, routing="allgather", pair_capacity="exact", n_max_mode="full"
+                ),
+            )
+        )
+        return tuple(tiers)
+
     def validate(self) -> None:
         if self.p & (self.p - 1):
             raise ValueError(f"p must be a power of two for bitonic stages, got {self.p}")
@@ -164,6 +214,8 @@ class SortConfig:
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
         if self.n_per_proc < 1:
             raise ValueError("n_per_proc must be >= 1")
+        if self.n_max_mode not in ("bound", "full"):
+            raise ValueError(f"unknown n_max_mode {self.n_max_mode!r}")
 
 
 @dataclasses.dataclass

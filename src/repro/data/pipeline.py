@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core import SortConfig, bsp_sort
+from repro.core import TierStats, bsp_sort_safe
 from repro.models.layers import dtype_of
 
 
@@ -42,7 +42,12 @@ def synthetic_batch(
 
 
 def length_bucketed_order(
-    doc_lengths: np.ndarray, p: int, *, algorithm: str = "iran", seed: int = 0
+    doc_lengths: np.ndarray,
+    p: int,
+    *,
+    algorithm: str = "iran",
+    seed: int = 0,
+    stats: Optional[TierStats] = None,
 ) -> np.ndarray:
     """Return doc ids in globally length-sorted order using the BSP sort.
 
@@ -50,17 +55,26 @@ def length_bucketed_order(
     processors, sorted by (length) with doc-id payload, and the
     concatenated valid prefixes give the bucketing order — equal lengths
     keep corpus order (stability = deterministic batch composition).
+
+    Runs through the overflow-safe driver: a skewed corpus (e.g. every doc
+    the same length) escalates the capacity tier instead of silently
+    dropping ids. Pass a ``TierStats`` to accumulate retry counters.
     """
     n = doc_lengths.shape[0]
-    n_p = -(-n // p)
+    # round the per-proc run up to a power of two: queue length varies every
+    # serving step, and each distinct n_p is a distinct jit/XLA compile of
+    # the whole tier ladder — bucketing bounds that to O(log n) programs.
+    n_p = max(8, 1 << max(0, -(-n // p) - 1).bit_length())
     pad = p * n_p - n
     lengths = np.concatenate([doc_lengths, np.full(pad, np.iinfo(np.int32).max)])
     ids = np.concatenate([np.arange(n, dtype=np.int32), np.full(pad, -1, np.int32)])
-    res, vals = bsp_sort(
+    res, vals, _ = bsp_sort_safe(
         jnp.asarray(lengths.reshape(p, n_p)),
         algorithm=algorithm,
+        pair_capacity="whp",  # cheap production tier; ladder handles skew
         values=(jnp.asarray(ids.reshape(p, n_p)),),
         seed=seed,
+        stats=stats,
     )
     buf = np.asarray(vals[0])
     cnt = np.asarray(res.count)

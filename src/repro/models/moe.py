@@ -32,6 +32,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core.primitives import shard_map
 from repro.models.layers import _dense, dtype_of
 
 
@@ -163,7 +164,7 @@ def moe_tp_sharded(
 
     dp = _dp_spec(mesh_info, x.shape[0])
     seq = axis if x.shape[1] % mesh_info.model_size == 0 else None
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh_info.mesh,
         in_specs=(
@@ -174,7 +175,6 @@ def moe_tp_sharded(
             P(None, axis, None),
         ),
         out_specs=(P(dp, seq, None), P()),
-        check_vma=False,
     )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
 
 
@@ -276,7 +276,7 @@ def moe_ep(
 
     dp = _dp_spec(mesh_info, x.shape[0])
     seq = axis if x.shape[1] % mesh_info.model_size == 0 else None
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh_info.mesh,
         in_specs=(
@@ -287,7 +287,6 @@ def moe_ep(
             P(axis, None, None),
         ),
         out_specs=(P(dp, seq, None), P()),
-        check_vma=False,
     )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
 
 
@@ -327,7 +326,7 @@ def moe_ep_decode(params: Dict, x: jnp.ndarray, cfg: ArchConfig, mesh_info: MoEM
         return y.reshape(bl, sl, D), aux
 
     dp = _dp_spec(mesh_info, x.shape[0])
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh_info.mesh,
         in_specs=(
@@ -338,5 +337,4 @@ def moe_ep_decode(params: Dict, x: jnp.ndarray, cfg: ArchConfig, mesh_info: MoEM
             P(axis, None, None),
         ),
         out_specs=(P(dp, None, None), P()),
-        check_vma=False,
     )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])

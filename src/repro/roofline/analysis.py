@@ -186,12 +186,17 @@ _DOT_RE = re.compile(r"=\s*(\S+)\s+dot\(")
 _LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 
 
-_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
 _OPERANDS_RE = re.compile(r"dot\(([^)]*)\)")
 
 
 def _op_shapes(hlo_text: str) -> Dict[str, tuple]:
-    """op name -> (dtype, dims list) from every definition line."""
+    """op name -> (dtype, dims list) from every definition line.
+
+    Names are normalised without the ``%`` sigil — optimized dumps print
+    typed operands (``dot(f32[128,128]{1,0} %Arg_0.1, ...)``) while the
+    synthetic fixtures use bare ``%name``; both resolve through one map.
+    """
     out = {}
     for line in hlo_text.splitlines():
         dm = _DEF_RE.match(line)
@@ -203,6 +208,28 @@ def _op_shapes(hlo_text: str) -> Dict[str, tuple]:
             dims = [int(d) for d in sm.group(2).split(",") if d]
             out[dm.group(1)] = (sm.group(1), dims)
     return out
+
+
+def _operand_names(arg_text: str) -> list:
+    """Operand names from a ``dot(...)`` argument list.
+
+    Splits only at bracket-depth-0 commas — shape dims (``f32[128,128]``)
+    and layouts (``{1,0}``) contain commas of their own — then takes each
+    operand's trailing token, ``%`` stripped.
+    """
+    parts, cur, depth = [], [], 0
+    for ch in arg_text:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+            continue
+        cur.append(ch)
+    parts.append("".join(cur))
+    return [p.strip().split(" ")[-1].lstrip("%") for p in parts if p.strip()]
 
 
 def parse_dot_stats(hlo_text: str) -> Dict[str, float]:
@@ -237,7 +264,7 @@ def parse_dot_stats(hlo_text: str) -> Dict[str, float]:
             lhs_shape = None
             op_bytes = _shape_bytes(res.group(1), res.group(2))
             if om:
-                names = [o.strip().split(" ")[-1] for o in om.group(1).split(",")]
+                names = _operand_names(om.group(1))
                 for i, nm in enumerate(names[:2]):
                     sh = shapes_by_name.get(nm)
                     if sh:

@@ -6,6 +6,14 @@ then steps all sequences in lockstep, sampling with serve/sampling.py and
 retiring sequences on EOS (a retired slot keeps decoding into a scratch
 token — the static-shape analogue of slot reuse; a production scheduler
 refills retired slots from the admission queue between steps).
+
+Admission ordering uses the BSP sort's overflow-safe driver
+(:meth:`ServeEngine.admission_order`): queued requests are globally sorted
+by prompt length so each admitted batch is length-homogeneous (minimal
+padding waste). Production traffic is adversarial by nature — a burst of
+identical lengths aims every key at one bucket — so the sort runs through
+the capacity-escalation ladder and the engine keeps per-tier retry counters
+(``capacity_stats``) for observability.
 """
 from __future__ import annotations
 
@@ -17,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import TierStats
+from repro.data import length_bucketed_order
 from repro.models import Model
 from repro.serve.sampling import sample
 
@@ -36,9 +46,22 @@ class ServeEngine:
         self.params = params
         self.scfg = serve_cfg
         self.mesh = mesh
+        self.capacity_stats = TierStats()  # sort-driver retry counters
         self._decode = jax.jit(
             lambda p, c, t: model.decode_step(p, c, t, None)
         )
+
+    def admission_order(self, prompt_lengths, p: int = 8) -> np.ndarray:
+        """Globally length-sorted admission order for a request queue.
+
+        One balanced BSP sort over ``p`` simulated processors replaces the
+        scheduler's gather-sort-scatter; the overflow-safe driver guarantees
+        no request id is ever dropped even when every prompt has the same
+        length (the all-keys-to-one-bucket adversarial case). Retry activity
+        accumulates in ``self.capacity_stats``.
+        """
+        lengths = np.asarray(prompt_lengths, np.int32)
+        return length_bucketed_order(lengths, p=p, stats=self.capacity_stats)
 
     def generate(self, prompts: jnp.ndarray, extras: Optional[Dict] = None, rng=None):
         """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32."""

@@ -5,6 +5,8 @@ import pytest
 
 from repro.core import BSPMachine, CRAY_T3D, SortConfig, predict
 
+pytestmark = pytest.mark.fast
+
 
 def _machine(p):
     L, g = CRAY_T3D[p]

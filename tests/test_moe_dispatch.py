@@ -8,6 +8,9 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models import moe as moe_mod
+import pytest
+
+pytestmark = pytest.mark.fast
 
 
 def _setup(E=4, k=2, T=64, D=32, F=16):

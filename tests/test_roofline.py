@@ -1,4 +1,6 @@
 """Roofline HLO parsers: unit tests on synthetic HLO text."""
+import pytest
+
 from repro.roofline.analysis import (
     _execution_multipliers,
     _split_computations,
@@ -6,6 +8,8 @@ from repro.roofline.analysis import (
     parse_dot_stats,
     scan_trip_factor,
 )
+
+pytestmark = pytest.mark.fast
 
 HLO = """\
 HloModule jit_step

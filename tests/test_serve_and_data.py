@@ -8,6 +8,9 @@ from repro.configs.base import ShapeConfig
 from repro.data import length_bucketed_order, synthetic_batch
 from repro.models import Model
 from repro.serve import ServeConfig, ServeEngine, sample
+import pytest
+
+pytestmark = pytest.mark.fast
 
 
 def test_greedy_sampling_is_argmax():
@@ -57,3 +60,27 @@ def test_length_bucketing_via_bsp_sort():
     assert len(order) == 999
     assert (np.diff(lens[order]) >= 0).all()
     assert sorted(order.tolist()) == list(range(999))  # a permutation
+
+
+def test_length_bucketing_survives_degenerate_lengths():
+    """All-equal lengths are the adversarial one-bucket case: the safe driver
+    must return every doc id exactly once (a scheduler that loses requests is
+    not a scheduler)."""
+    lens = np.full(777, 2048, np.int32)
+    order = length_bucketed_order(lens, p=8, algorithm="iran")
+    assert sorted(order.tolist()) == list(range(777))
+
+
+def test_serve_engine_admission_order_tracks_capacity_stats():
+    cfg = get_arch("tinyllama-1.1b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params, ServeConfig(max_new_tokens=2))
+    lens = np.random.default_rng(3).integers(1, 4096, 333).astype(np.int32)
+    order = eng.admission_order(lens)
+    assert sorted(order.tolist()) == list(range(333))
+    assert (np.diff(lens[order]) >= 0).all()
+    assert sum(eng.capacity_stats.attempts.values()) >= 1
+    # adversarial burst: every request the same length — ids must survive
+    order2 = eng.admission_order(np.full(333, 512, np.int32))
+    assert sorted(order2.tolist()) == list(range(333))

@@ -3,7 +3,14 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import SortConfig, bsp_sort, gathered_output, datagen
+from repro.core import (
+    SortConfig,
+    TierStats,
+    bsp_sort,
+    bsp_sort_safe,
+    datagen,
+    gathered_output,
+)
 
 P, NP = 8, 1024
 
@@ -29,6 +36,7 @@ def test_all_algorithms_all_distributions(algo, dist):
     assert ok
 
 
+@pytest.mark.fast
 @pytest.mark.parametrize("routing", ["a2a_dense", "allgather", "ring"])
 @pytest.mark.parametrize("merge", ["sort", "tree"])
 def test_routing_and_merge_schedules(routing, merge):
@@ -39,6 +47,7 @@ def test_routing_and_merge_schedules(routing, merge):
     assert ok and not bool(res.overflow)
 
 
+@pytest.mark.fast
 @pytest.mark.parametrize("local_sort", ["lax", "radix", "bitonic"])
 def test_local_sort_methods(local_sort):
     x = datagen.generate("U", P, NP, seed=4)
@@ -52,6 +61,7 @@ def test_whp_pair_capacity_production_mode():
     assert ok and not bool(res.overflow)
 
 
+@pytest.mark.fast
 def test_lemma_5_1_receive_bound():
     """Max keys per processor ≤ n_max = (1+1/⌈ω⌉)(n/p) + ⌈ω⌉p (+padding)."""
     for dist in ["U", "B", "S", "DD", "WR"]:
@@ -82,6 +92,61 @@ def test_duplicate_stability_key_value():
         for v in np.unique(kout):
             sel = vout[kout == v]
             assert (np.diff(sel) > 0).all()  # stable within equal keys
+
+
+@pytest.mark.fast
+def test_safe_driver_escalates_on_adversarial_input():
+    """Acceptance: an all-keys-to-one-bucket input (each proc's run constant)
+    overflows the w.h.p. pair capacity; the escalation driver must retry at
+    higher tiers and deliver the complete sorted output — no key dropped."""
+    x = np.repeat((np.arange(P, dtype=np.int32) * 1000)[:, None], NP, axis=1)
+    cfg = SortConfig(p=P, n_per_proc=NP, algorithm="iran", pair_capacity="whp")
+
+    # the unsafe sort faults (and would silently truncate if trusted)
+    res_unsafe, _ = bsp_sort(jnp.asarray(x), cfg)
+    assert bool(res_unsafe.overflow)
+
+    stats = TierStats()
+    res, _, stats = bsp_sort_safe(jnp.asarray(x), cfg, stats=stats)
+    assert not bool(res.overflow)
+    assert np.array_equal(gathered_output(res), np.sort(x.reshape(-1)))
+    assert stats.retries >= 1, stats.as_row()  # at least one tier escalation
+    assert stats.attempts.get("whp", 0) == 1 and stats.last_tier != "whp"
+
+
+@pytest.mark.fast
+def test_safe_driver_benign_input_stays_on_whp_tier():
+    """On well-behaved input the ladder must not escalate (no wasted work),
+    and the terminal allgather tier must also sort standalone."""
+    x = datagen.generate("U", P, NP, seed=13)
+    cfg = SortConfig(p=P, n_per_proc=NP, algorithm="iran", pair_capacity="whp")
+    res, _, stats = bsp_sort_safe(jnp.asarray(x), cfg)
+    assert stats.retries == 0 and stats.last_tier == "whp"
+    assert np.array_equal(gathered_output(res), np.sort(x.reshape(-1)))
+    # terminal tier standalone: full-size receive buffer, overflow impossible
+    _, terminal = cfg.tier_ladder()[-1]
+    assert terminal.routing == "allgather" and terminal.n_max >= cfg.n
+    res2, _ = bsp_sort(jnp.asarray(x), terminal)
+    assert not bool(res2.overflow)
+    assert np.array_equal(gathered_output(res2), np.sort(x.reshape(-1)))
+
+
+@pytest.mark.fast
+def test_safe_driver_key_value_payload_survives_escalation():
+    """Payloads must ride through the retry ladder intact (MoE dispatch and
+    data bucketing depend on the key-value form)."""
+    x = np.repeat((np.arange(P, dtype=np.int32)[::-1] * 7)[:, None], NP, axis=1)
+    ids = np.arange(P * NP, dtype=np.int32).reshape(P, NP)
+    cfg = SortConfig(p=P, n_per_proc=NP, algorithm="iran", pair_capacity="whp")
+    res, vbufs, stats = bsp_sort_safe(
+        jnp.asarray(x), cfg, values=(jnp.asarray(ids),)
+    )
+    assert stats.retries >= 1
+    cnt = np.asarray(res.count)
+    vout = np.concatenate([np.asarray(vbufs[0])[k, : cnt[k]] for k in range(P)])
+    kout = gathered_output(res)
+    assert np.array_equal(x.reshape(-1)[vout], kout)  # a permutation
+    assert np.array_equal(kout, np.sort(x.reshape(-1)))
 
 
 def test_iran_beats_det_imbalance_on_average():

@@ -1,9 +1,12 @@
 """Property-based tests (hypothesis) for the sorting system's invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import SortConfig, bsp_sort, gathered_output
+from repro.core import SortConfig, bsp_sort, bsp_sort_safe, gathered_output
 
 settings.register_profile("ci", deadline=None, max_examples=20)
 settings.load_profile("ci")
@@ -63,6 +66,28 @@ def test_float_keys(seed):
     res, _ = bsp_sort(jnp.asarray(x), algorithm="det")
     out = gathered_output(res)
     assert np.array_equal(out, np.sort(x.reshape(-1)))
+
+
+@given(
+    st.sampled_from([4, 8]),
+    # fixed sizes: every distinct (p, n_p, algo) jit-compiles the whole tier
+    # ladder, so a free-ranging n_p would compile ~per example
+    st.sampled_from([64, 256, 512]),
+    st.sampled_from(["det", "iran", "ran"]),
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_safe_driver_never_truncates(p, n_p, algo, seed):
+    """Adversarial skew (each proc's run aimed at ONE bucket) must sort
+    correctly through tier escalation — full output, zero dropped keys."""
+    rng = np.random.default_rng(seed)
+    # constant-per-proc runs in a random proc order: every local run lands in
+    # a single destination bucket, overwhelming any w.h.p. pair capacity.
+    vals = rng.choice(10**6, size=p, replace=False).astype(np.int32)
+    x = np.repeat(vals[:, None], n_p, axis=1)
+    cfg = SortConfig(p=p, n_per_proc=n_p, algorithm=algo, pair_capacity="whp")
+    res, _, stats = bsp_sort_safe(jnp.asarray(x), cfg)
+    assert not bool(res.overflow)
+    assert np.array_equal(gathered_output(res), np.sort(x.reshape(-1)))
 
 
 @given(st.integers(min_value=0, max_value=10**6))

@@ -33,6 +33,7 @@ def test_loss_decreases_on_memorizable_data():
     assert losses[-1] < losses[0] * 0.8, losses
 
 
+@pytest.mark.fast
 def test_adamw_clip_and_schedule():
     oc = OptConfig(lr=1.0, clip_norm=0.5, warmup_steps=0, total_steps=100)
     params = {"w": jnp.ones((4,))}
@@ -86,6 +87,7 @@ def test_checkpoint_restart_is_exact():
             assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.fast
 def test_checkpoint_integrity_detection():
     with tempfile.TemporaryDirectory() as d:
         path = checkpoint.save(d, 1, {"x": jnp.arange(10)})
@@ -96,6 +98,7 @@ def test_checkpoint_integrity_detection():
             checkpoint.restore(d, 1, {"x": jnp.arange(10)})
 
 
+@pytest.mark.fast
 def test_checkpoint_gc_keeps_window():
     with tempfile.TemporaryDirectory() as d:
         for s in range(6):
@@ -103,6 +106,7 @@ def test_checkpoint_gc_keeps_window():
         assert checkpoint.all_steps(d) == [3, 4, 5]
 
 
+@pytest.mark.fast
 def test_straggler_monitor():
     mon = elastic.StragglerMonitor(threshold=2.0, patience=2)
     for _ in range(6):
@@ -111,6 +115,7 @@ def test_straggler_monitor():
     assert mon.record(5.0)  # patience reached → remesh advised
 
 
+@pytest.mark.fast
 def test_plan_remesh_preserves_model_axis_and_batch():
     (d, m), accum = elastic.plan_remesh(
         n_devices=192, model_axis=16, old_data_axis=16, global_batch=256
@@ -120,6 +125,7 @@ def test_plan_remesh_preserves_model_axis_and_batch():
         elastic.plan_remesh(n_devices=8, model_axis=16, old_data_axis=16, global_batch=256)
 
 
+@pytest.mark.fast
 def test_capacity_retry_ladder():
     calls = []
 
@@ -131,6 +137,7 @@ def test_capacity_retry_ladder():
     assert out[1] >= 1.5 and len(calls) >= 2
 
 
+@pytest.mark.fast
 def test_gradient_compression_error_feedback():
     rng = jax.random.key(0)
     g = {"w": jax.random.normal(jax.random.key(1), (1000,))}

@@ -201,7 +201,7 @@ def table_bsp_model_validation(n, ps=(16, 32, 64, 128)):
             )
 
 
-def table_capacity_retry(n, p=16, variants=("RSQ", "DSQ")):
+def table_capacity_retry(n, p=16, variants=("RSQ", "RSR", "DSQ")):
     """Capacity-tier retry profile: how often w.h.p. capacity suffices.
 
     Production setting (pair_capacity="whp") through the overflow-safe
@@ -209,6 +209,16 @@ def table_capacity_retry(n, p=16, variants=("RSQ", "DSQ")):
     all-keys-to-one-bucket input (each proc's run constant) that no w.h.p.
     bound survives. Row = per-tier attempt counters + the tier that finally
     served the sort + wall time including retries.
+
+    ``wall_s`` is the resumable pipeline (prepare once, re-enter route per
+    rung); ``wall_full_s`` re-runs the whole sort per rung (the
+    pre-pipeline driver, ``resume=False``); ``retry_cost`` is their ratio —
+    the measured full-rerun escalation overhead, only meaningful on rows
+    that actually escalate (ADV, and the skewed sets). The win tracks the
+    Ph2 share of a tier attempt: ~2× for the radix variants ([RSR], where
+    the counting-split local sort dominates), near 1× for [·SQ] on CPU
+    where XLA's fused comparison sort is cheap relative to the escalated
+    tiers' dense routing buffers.
     """
     n_p = n // p
     adv = np.repeat((np.arange(p, dtype=np.int32) * (2**20))[:, None], n_p, axis=1)
@@ -221,11 +231,16 @@ def table_capacity_retry(n, p=16, variants=("RSQ", "DSQ")):
             x = jnp.asarray(adv) if dist == "ADV" else jnp.asarray(
                 datagen.generate(dist, p, n_p, seed=21)
             )
-            bsp_sort_safe(x, cfg)  # warm: compile every tier this input visits
+            # warm: compile every tier this input visits, both drivers
+            bsp_sort_safe(x, cfg)
+            bsp_sort_safe(x, cfg, resume=False)
             stats = TierStats()
             t0 = time.time()
             res, _, stats = bsp_sort_safe(x, cfg, stats=stats)
             wall = time.time() - t0  # sort + retries, compiles amortized
+            t0 = time.time()
+            bsp_sort_safe(x, cfg, resume=False)
+            wall_full = time.time() - t0
             ok = np.array_equal(
                 gathered_output(res), np.sort(np.asarray(x).reshape(-1))
             )
@@ -233,7 +248,10 @@ def table_capacity_retry(n, p=16, variants=("RSQ", "DSQ")):
                 "capacity",
                 {"variant": v, "dist": dist, "n": n, "p": p,
                  "served_by": stats.last_tier, "complete": ok,
-                 "wall_s": round(wall, 4), **stats.as_row()},
+                 "wall_s": round(wall, 4),
+                 "wall_full_s": round(wall_full, 4),
+                 "retry_cost": round(wall_full / max(wall, 1e-9), 2),
+                 **stats.as_row()},
             )
 
 

@@ -2,27 +2,34 @@
 
 Public API:
     SortConfig, SortResult        — configuration / result types
+    PreparedSort                  — tier-invariant prepared state (Ph2 + det Ph3)
     bsp_sort                      — simulated-processor runner (vmap)
-    bsp_sort_sharded              — real-device runner (shard_map)
-    bsp_sort_safe / _sharded_safe — overflow-safe drivers (capacity-tier
-                                    escalation ladder; no key ever dropped)
+    bsp_sort_sharded              — real-device runner (shard_map, cached)
+    bsp_sort_safe / _sharded_safe — overflow-safe drivers: prepare once, then
+                                    re-enter only the route stage per rung of
+                                    the capacity ladder; no key ever dropped
+    SortExecutor                  — compiled-callable registry (both runners)
     TierStats                     — per-tier retry counters for the drivers
     phase_fns                     — per-phase callables (paper Tables 4-7)
     predict, BSPMachine, CRAY_T3D — BSP (p, L, g) cost model (§1.1, Props 5.1/5.3)
     datagen                       — §6.3 benchmark input distributions
 """
 from .api import (
+    SortExecutor,
     TierStats,
     bsp_sort,
     bsp_sort_safe,
     bsp_sort_sharded,
     bsp_sort_sharded_safe,
+    default_executor,
     gathered_output,
     phase_fns,
+    spmd_prepare_fn,
+    spmd_route_fn,
     spmd_sort_fn,
 )
 from .bsp import BSPMachine, CRAY_T3D, Prediction, predict, theoretical_max_imbalance
-from .types import AXIS, SortConfig, SortResult, sentinel_for
+from .types import AXIS, PreparedSort, SortConfig, SortResult, sentinel_for
 
 from . import datagen  # noqa: F401
 
@@ -31,7 +38,9 @@ __all__ = [
     "BSPMachine",
     "CRAY_T3D",
     "Prediction",
+    "PreparedSort",
     "SortConfig",
+    "SortExecutor",
     "SortResult",
     "TierStats",
     "bsp_sort",
@@ -39,10 +48,13 @@ __all__ = [
     "bsp_sort_sharded",
     "bsp_sort_sharded_safe",
     "datagen",
+    "default_executor",
     "gathered_output",
     "phase_fns",
     "predict",
     "sentinel_for",
+    "spmd_prepare_fn",
+    "spmd_route_fn",
     "spmd_sort_fn",
     "theoretical_max_imbalance",
 ]

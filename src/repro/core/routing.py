@@ -41,7 +41,10 @@ a retriable fault: the driver re-runs the jitted sort at the next rung of
 On a clean flag the partially-filled buffers of the failed attempt are
 discarded (nothing was written back), so retries are idempotent; per-tier
 attempt counters (``api.TierStats``) surface how often the cheap tier
-actually sufficed per workload.
+actually sufficed per workload. A retry re-enters the pipeline *here* (the
+route stage), not at Ph2: the driver reuses the tier-invariant
+``PreparedSort`` (local sort + det splitters) and only re-runs
+Ph3b..Ph6 per rung — see ``api.SortExecutor``.
 
 Values (payload arrays with leading dim n_p) ride along with the keys — this
 is the key-value form used by MoE token dispatch (models/moe.py).
@@ -53,6 +56,7 @@ from typing import List, Sequence, Tuple
 import jax.numpy as jnp
 from jax import lax
 
+from . import merge as merge_mod
 from . import primitives as prim
 from .types import SortConfig, sentinel_for
 
@@ -199,6 +203,31 @@ def route(
     out = compact_rows(rows, rcounts, cap, sent)
     total = jnp.minimum(rcounts.sum(), cap)
     return out[0], out[1:], total, overflow
+
+
+def route_and_merge(
+    x_sorted: jnp.ndarray,
+    boundaries: jnp.ndarray,
+    cfg: SortConfig,
+    axis: str,
+    values: Sequence[jnp.ndarray] = (),
+) -> Tuple[jnp.ndarray, List[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    """Ph5 + Ph6 tail shared by det/iran: route, then stable merge.
+
+    Requires bucket i of the local run (``x_sorted[b[i]:b[i+1]]``) to be
+    sorted, so each received row is a sorted run — which is what makes the
+    ``merge=tree`` rank-merge path valid (``ran`` routes dest-grouped, not
+    key-sorted, rows and must keep its own sort-based tail).
+    """
+    if cfg.merge == "tree" and not values and cfg.routing != "ring":
+        rows, rcounts, overflow = recv_rows(x_sorted, boundaries, cfg, axis, ())
+        merged, count = merge_mod.merge_tree(rows[0], rcounts)
+        merged = merged[: cfg.n_max]
+        return merged, [], jnp.minimum(count, cfg.n_max), overflow
+
+    buf, vbufs, count, overflow = route(x_sorted, boundaries, cfg, axis, values)
+    merged, mvals = merge_mod.merge_by_sort(buf, vbufs)
+    return merged, mvals, count, overflow
 
 
 def _route_ring(x_sorted, boundaries, cfg, axis, values, sent):

@@ -12,6 +12,11 @@ Duplicate keys are handled transparently per §5.1.1: only the o(n) sample /
 splitter records carry (proc, idx) tags; the partition comparator and every
 sort/merge are stable, so the output is the stable sort of the input even
 when *all* keys are equal — with no doubling of computation or communication.
+
+The body is an explicit two-stage pipeline (``prepare`` → ``route``): Ph2/Ph3
+are independent of the capacity tier (regular oversampling is deterministic
+and rank-only), so the overflow-safe driver runs :func:`prepare_det_spmd`
+once and re-enters :func:`route_det_spmd` per ladder rung.
 """
 from __future__ import annotations
 
@@ -20,10 +25,35 @@ from typing import List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import merge as merge_mod
 from . import routing, splitters
 from .local_sort import local_sort
-from .types import SortConfig, sentinel_for
+from .types import PreparedSort, SortConfig
+
+
+def prepare_det_spmd(
+    x: jnp.ndarray,
+    cfg: SortConfig,
+    axis: str,
+    values: Sequence[jnp.ndarray] = (),
+    rng: jax.Array | None = None,  # unused; uniform pipeline signature
+) -> PreparedSort:
+    """Tier-invariant stages: Ph2 local sort + Ph3 sample/splitters."""
+    del rng
+    xs, vals = local_sort(x, cfg.local_sort, values)  # Ph2
+    splits = splitters.splitter_stage(xs, cfg, axis)  # Ph3 (deterministic)
+    return PreparedSort(xs=xs, vals=tuple(vals), splits=splits)
+
+
+def route_det_spmd(
+    prep: PreparedSort,
+    cfg: SortConfig,
+    axis: str,
+    rng: jax.Array | None = None,  # unused; uniform pipeline signature
+) -> Tuple[jnp.ndarray, List[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    """Tier-dependent stages: Ph4 partition, Ph5 routing, Ph6 merge."""
+    del rng
+    bounds = splitters.searchsorted_tagged(prep.xs, prep.splits, axis)  # Ph4
+    return routing.route_and_merge(prep.xs, bounds, cfg, axis, list(prep.vals))
 
 
 def sort_det_spmd(
@@ -33,18 +63,4 @@ def sort_det_spmd(
     values: Sequence[jnp.ndarray] = (),
     rng: jax.Array | None = None,  # unused; uniform signature with iran
 ) -> Tuple[jnp.ndarray, List[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
-    del rng
-    xs, vals = local_sort(x, cfg.local_sort, values)  # Ph2
-    sample = splitters.regular_sample(xs, cfg, axis)  # Ph3
-    splits = splitters.splitters_from_sorted_sample(cfg, sample, axis)
-    bounds = splitters.searchsorted_tagged(xs, splits, axis)  # Ph4
-
-    if cfg.merge == "tree" and not vals and cfg.routing != "ring":
-        rows, rcounts, overflow = routing.recv_rows(xs, bounds, cfg, axis, vals)
-        merged, count = merge_mod.merge_tree(rows[0], rcounts)
-        merged = merged[: cfg.n_max]
-        return merged, [], jnp.minimum(count, cfg.n_max), overflow
-
-    buf, vbufs, count, overflow = routing.route(xs, bounds, cfg, axis, vals)  # Ph5
-    merged, mvals = merge_mod.merge_by_sort(buf, vbufs)  # Ph6
-    return merged, mvals, count, overflow
+    return route_det_spmd(prepare_det_spmd(x, cfg, axis, values), cfg, axis)

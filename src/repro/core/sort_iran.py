@@ -8,6 +8,13 @@ tighter key balance for the same sample size (paper §6.4: observed imbalance
 <15% vs the ~20% theoretical bound 1/√(lg n)).
 
 Shares Ph4-Ph6 with SORT_DET_BSP including §5.1.1 duplicate handling.
+
+Pipeline split: only Ph2 (the local sort) is tier-invariant here — the Ph3
+sample is drawn from the rng, and the overflow-safe driver folds the rng per
+capacity tier so every retry is an *independent* splitter trial (re-routing
+with the splitters that just overflowed would fail deterministically on
+skewed inputs). Hence :func:`prepare_iran_spmd` carries only the sorted run
+and :func:`route_iran_spmd` re-runs Ph3..Ph6 per rung.
 """
 from __future__ import annotations
 
@@ -16,10 +23,36 @@ from typing import List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import merge as merge_mod
 from . import routing, splitters
 from .local_sort import local_sort
-from .types import SortConfig
+from .types import PreparedSort, SortConfig
+
+
+def prepare_iran_spmd(
+    x: jnp.ndarray,
+    cfg: SortConfig,
+    axis: str,
+    values: Sequence[jnp.ndarray] = (),
+    rng: jax.Array | None = None,  # unused: Ph3 randomness lives in route
+) -> PreparedSort:
+    """Tier-invariant stage: Ph2 stable local sort (keys + payload)."""
+    del rng
+    xs, vals = local_sort(x, cfg.local_sort, values)  # Ph2
+    return PreparedSort(xs=xs, vals=tuple(vals), splits=None)
+
+
+def route_iran_spmd(
+    prep: PreparedSort,
+    cfg: SortConfig,
+    axis: str,
+    rng: jax.Array | None = None,
+) -> Tuple[jnp.ndarray, List[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    """Tier-dependent stages: Ph3 random splitters, Ph4..Ph6."""
+    if rng is None:
+        rng = jax.random.key(cfg.seed)
+    splits = splitters.splitter_stage(prep.xs, cfg, axis, rng)  # Ph3
+    bounds = splitters.searchsorted_tagged(prep.xs, splits, axis)  # Ph4
+    return routing.route_and_merge(prep.xs, bounds, cfg, axis, list(prep.vals))
 
 
 def sort_iran_spmd(
@@ -29,19 +62,4 @@ def sort_iran_spmd(
     values: Sequence[jnp.ndarray] = (),
     rng: jax.Array | None = None,
 ) -> Tuple[jnp.ndarray, List[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
-    if rng is None:
-        rng = jax.random.key(cfg.seed)
-    xs, vals = local_sort(x, cfg.local_sort, values)  # Ph2
-    sample = splitters.random_sample(xs, cfg, axis, rng)  # Ph3
-    splits = splitters.splitters_from_sorted_sample(cfg, sample, axis)
-    bounds = splitters.searchsorted_tagged(xs, splits, axis)  # Ph4
-
-    if cfg.merge == "tree" and not vals and cfg.routing != "ring":
-        rows, rcounts, overflow = routing.recv_rows(xs, bounds, cfg, axis, vals)
-        merged, count = merge_mod.merge_tree(rows[0], rcounts)
-        merged = merged[: cfg.n_max]
-        return merged, [], jnp.minimum(count, cfg.n_max), overflow
-
-    buf, vbufs, count, overflow = routing.route(xs, bounds, cfg, axis, vals)  # Ph5
-    merged, mvals = merge_mod.merge_by_sort(buf, vbufs)  # Ph6
-    return merged, mvals, count, overflow
+    return route_iran_spmd(prepare_iran_spmd(x, cfg, axis, values), cfg, axis, rng)

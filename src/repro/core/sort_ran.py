@@ -8,6 +8,12 @@ constant, and sample sorting is sequential on processor 0).
 Step 9's "integer sort by destination" is realized as a stable argsort of the
 destination ids — exactly the set-formation operation the paper prices at
 D·n/p.
+
+Pipeline split: *nothing* here is tier-invariant — the sample is drawn from
+the raw run with the per-tier rng, and the full local sort happens after
+routing (step 12). :func:`prepare_ran_spmd` therefore just wraps the input;
+escalation still profits from the shared executor (compiled-callable reuse)
+and from the uniform prepare/route execution model.
 """
 from __future__ import annotations
 
@@ -19,19 +25,30 @@ from jax import lax
 
 from . import merge as merge_mod
 from . import routing
-from .local_sort import local_sort
-from .types import SortConfig
+from .types import PreparedSort, SortConfig
 
 
-def sort_ran_spmd(
+def prepare_ran_spmd(
     x: jnp.ndarray,
     cfg: SortConfig,
     axis: str,
     values: Sequence[jnp.ndarray] = (),
     rng: jax.Array | None = None,
+) -> PreparedSort:
+    """No tier-invariant work: classic sample sort local-sorts *last*."""
+    del rng
+    return PreparedSort(xs=x, vals=tuple(values), splits=None)
+
+
+def route_ran_spmd(
+    prep: PreparedSort,
+    cfg: SortConfig,
+    axis: str,
+    rng: jax.Array | None = None,
 ) -> Tuple[jnp.ndarray, List[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
     if rng is None:
         rng = jax.random.key(cfg.seed)
+    x, values = prep.xs, list(prep.vals)
     n_p = x.shape[0]
     p = cfg.p
     me = lax.axis_index(axis)
@@ -60,3 +77,13 @@ def sort_ran_spmd(
     buf, vbufs, count, overflow = routing.route(xg, bounds, cfg, axis, vals)
     merged, mvals = merge_mod.merge_by_sort(buf, vbufs)
     return merged, mvals, count, overflow
+
+
+def sort_ran_spmd(
+    x: jnp.ndarray,
+    cfg: SortConfig,
+    axis: str,
+    values: Sequence[jnp.ndarray] = (),
+    rng: jax.Array | None = None,
+) -> Tuple[jnp.ndarray, List[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    return route_ran_spmd(prepare_ran_spmd(x, cfg, axis, values), cfg, axis, rng)

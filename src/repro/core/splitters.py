@@ -165,3 +165,21 @@ def splitters_from_sorted_sample(
         return select_splitters(cfg, sorted_sample, axis, "gather")
     sorted_sample = sample_sort_bitonic(sample, cfg.p, axis)
     return select_splitters(cfg, sorted_sample, axis, "bitonic")
+
+
+def splitter_stage(
+    x_sorted: jnp.ndarray, cfg: SortConfig, axis: str, rng: jax.Array | None = None
+) -> Tagged:
+    """Full Ph3 for ``cfg.algorithm``: sampling + sample sort + selection.
+
+    The single splitter pipeline shared by the sort bodies, the resumable
+    route stage and the phase-decomposed benchmark callables. ``det`` is
+    deterministic (and hence capacity-tier-invariant — it runs in the
+    prepare stage); ``iran`` draws its sample from ``rng``, so the route
+    stage re-enters here with a per-tier folded key.
+    """
+    if cfg.algorithm == "det":
+        sample = regular_sample(x_sorted, cfg, axis)
+    else:
+        sample = random_sample(x_sorted, cfg, axis, rng)
+    return splitters_from_sorted_sample(cfg, sample, axis)

@@ -20,11 +20,21 @@ stability guarantee doing real work. Two paths:
   runs one dense GEMM (MegaBlocks-style), then scattered back.
 
 Router aux losses (load-balance + z-loss) are returned for the trainer.
+
+Capacity-tier ladder: a fixed ``capacity_factor`` is exactly the w.h.p.
+pair-capacity guess of the sort's ``whp`` tier, and token drop is the same
+retriable capacity fault as sort overflow. :func:`moe_ep_safe` runs EP
+dispatch through the sort driver's ladder (whp → whp×2 → full) at host
+level: the overflow flag escalates the capacity instead of silently
+dropping tokens, with per-tier attempts recorded in a shared
+:class:`repro.core.TierStats`. (Inside a jitted train step there is no host
+sync, so the training path keeps the fixed-capacity body and surfaces
+``aux['overflow']`` for the metrics loop.)
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +42,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core import TierStats
 from repro.core.primitives import shard_map
 from repro.models.layers import _dense, dtype_of
 
@@ -297,6 +308,68 @@ def _dp_spec(mesh_info: MoEMeshInfo, batch: int):
     for a in mesh_info.data_axes:
         n *= mesh_info.mesh.shape[a]
     return mesh_info.data_axes if batch % n == 0 else None
+
+
+def moe_capacity_ladder(capacity_factor: float, p: int) -> tuple:
+    """EP dispatch capacity tiers, mirroring ``SortConfig.tier_ladder``.
+
+    ``whp``  — the configured guess (pair_cap = ⌈n·cf/p⌉);
+    ``whp2`` — the same bound ×2 (squares the failure probability);
+    ``full`` — pair_cap = n: the per-destination row can hold every record,
+    so no routing pattern can overflow it and the ladder always terminates.
+    """
+    tiers = [("whp", float(capacity_factor)), ("whp2", 2.0 * capacity_factor)]
+    if 2.0 * capacity_factor < p:
+        tiers.append(("full", float(p)))
+    else:  # whp2 already at/above full capacity — dedupe the terminal rung
+        tiers[-1] = ("full", float(p))
+    return tuple(tiers)
+
+
+#: jitted EP dispatch callables keyed by (cfg, mesh_info, capacity_factor) —
+#: all frozen/hashable, so each ladder rung compiles once per process.
+_EP_JIT_CACHE: Dict[tuple, object] = {}
+
+
+def _moe_ep_jitted(cfg: ArchConfig, mesh_info: MoEMeshInfo, capacity_factor: float):
+    key = (cfg, mesh_info, float(capacity_factor))
+    fn = _EP_JIT_CACHE.get(key)
+    if fn is None:
+        fn = _EP_JIT_CACHE[key] = jax.jit(
+            lambda p, x: moe_ep(p, x, cfg, mesh_info, capacity_factor)
+        )
+    return fn
+
+
+def moe_ep_safe(
+    params: Dict,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    mesh_info: MoEMeshInfo,
+    capacity_factor: float = 1.25,
+    stats: Optional[TierStats] = None,
+) -> Tuple[jnp.ndarray, Dict, TierStats]:
+    """Overflow-safe EP dispatch: escalate the capacity tier on token drop.
+
+    The host-side analogue of ``bsp_sort_safe`` for MoE routing: run the
+    jitted EP layer at each rung of :func:`moe_capacity_ladder`, inspect the
+    replicated ``aux['overflow']`` flag, and retry at the next capacity tier
+    until no token was dropped. The terminal ``full`` rung sizes every
+    (src, dst) row at n records, which cannot overflow. Use at serving /
+    evaluation time (top-level calls with a host sync per layer); the jitted
+    train step keeps the fixed-capacity :func:`moe_ep`.
+    """
+    stats = stats if stats is not None else TierStats()
+    for tier, cf in moe_capacity_ladder(capacity_factor, mesh_info.model_size):
+        y, aux = _moe_ep_jitted(cfg, mesh_info, cf)(params, x)
+        ok = not bool(aux["overflow"])
+        stats.record(tier, ok)
+        if ok:
+            return y, aux, stats
+    raise RuntimeError(
+        "EP capacity escalation exhausted — unreachable: the full tier "
+        "holds every record"
+    )
 
 
 def moe_ep_decode(params: Dict, x: jnp.ndarray, cfg: ArchConfig, mesh_info: MoEMeshInfo):

@@ -1,24 +1,31 @@
 """Batched serving engine: continuous-batching decode loop over a KV cache.
 
 Single-host reference implementation of the serving driver the dry-run
-lowers: ``prefill`` builds the cache for a batch of prompts, ``ServeEngine``
-then steps all sequences in lockstep, sampling with serve/sampling.py and
-retiring sequences on EOS (a retired slot keeps decoding into a scratch
-token — the static-shape analogue of slot reuse; a production scheduler
-refills retired slots from the admission queue between steps).
+lowers. Two decode modes:
+
+* :meth:`ServeEngine.generate` — one fixed batch in lockstep (a retired slot
+  keeps decoding into a scratch token — the static-shape analogue of slot
+  reuse).
+* :meth:`ServeEngine.serve` — continuous batching over a request queue: a
+  fixed number of decode *slots*, each slot an independent (cache, position)
+  lane stacked into one vmapped decode step. When a sequence retires (EOS or
+  its token budget), the slot is refilled from the admission queue between
+  steps: the new request is prefilled alone and its cache written into the
+  retired slot's lane, while the other slots keep decoding uninterrupted.
 
 Admission ordering uses the BSP sort's overflow-safe driver
 (:meth:`ServeEngine.admission_order`): queued requests are globally sorted
 by prompt length so each admitted batch is length-homogeneous (minimal
-padding waste). Production traffic is adversarial by nature — a burst of
-identical lengths aims every key at one bucket — so the sort runs through
-the capacity-escalation ladder and the engine keeps per-tier retry counters
-(``capacity_stats``) for observability.
+padding waste — and consecutive refills share prefill compile cache, since
+prefill is jitted per distinct prompt length). Production traffic is
+adversarial by nature — a burst of identical lengths aims every key at one
+bucket — so the sort runs through the capacity-escalation ladder and the
+engine keeps per-tier retry counters (``capacity_stats``) for observability.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -47,9 +54,19 @@ class ServeEngine:
         self.scfg = serve_cfg
         self.mesh = mesh
         self.capacity_stats = TierStats()  # sort-driver retry counters
+        self.refills = 0  # queue admissions into retired decode slots
         self._decode = jax.jit(
             lambda p, c, t: model.decode_step(p, c, t, None)
         )
+        # slot-stacked decode: each slot is an independent batch-1 lane with
+        # its own cache['pos'], so slots at different depths step together.
+        self._decode_slots = jax.jit(
+            jax.vmap(
+                lambda p, c, t: model.decode_step(p, c, t, None),
+                in_axes=(None, 0, 0),
+            )
+        )
+        self._prefill_jits: Dict[tuple, object] = {}  # per (prompt_len, cache_len)
 
     def admission_order(self, prompt_lengths, p: int = 8) -> np.ndarray:
         """Globally length-sorted admission order for a request queue.
@@ -72,23 +89,153 @@ class ServeEngine:
         cache, logits = self.model.prefill(self.params, batch, cache_len=cache_len)
         outs: List[jnp.ndarray] = []
         done = jnp.zeros((b,), bool)
-        tok = sample(
+        tok = self._sample(logits, rng)
+        for i in range(self.scfg.max_new_tokens):
+            outs.append(jnp.where(done, self.scfg.eos_id, tok))
+            done = done | (tok == self.scfg.eos_id)
+            logits, cache = self._decode(self.params, cache, tok)
+            rng = jax.random.fold_in(rng, i)
+            tok = self._sample(logits, rng)
+        return jnp.stack(outs, axis=1)
+
+    # ------------------------------------------------ continuous batching
+    def _prefill_one(self, tokens: np.ndarray, cache_len: int):
+        """Prefill one request (batch 1). Jitted per distinct
+        (prompt length, cache length) pair — which the length-sorted
+        admission order keeps to a minimum."""
+        key = (int(tokens.shape[0]), int(cache_len))
+        fn = self._prefill_jits.get(key)
+        if fn is None:
+            fn = self._prefill_jits[key] = jax.jit(
+                lambda p, t: self.model.prefill(
+                    p, {"tokens": t}, cache_len=cache_len
+                )
+            )
+        return fn(self.params, jnp.asarray(tokens, jnp.int32)[None])
+
+    def _sample(self, logits, rng):
+        return sample(
             logits,
             rng,
             temperature=self.scfg.temperature,
             top_k=self.scfg.top_k,
             top_p=self.scfg.top_p,
         )
-        for i in range(self.scfg.max_new_tokens):
-            outs.append(jnp.where(done, self.scfg.eos_id, tok))
-            done = done | (tok == self.scfg.eos_id)
-            logits, cache = self._decode(self.params, cache, tok)
-            rng = jax.random.fold_in(rng, i)
-            tok = sample(
-                logits,
-                rng,
-                temperature=self.scfg.temperature,
-                top_k=self.scfg.top_k,
-                top_p=self.scfg.top_p,
-            )
-        return jnp.stack(outs, axis=1)
+
+    def serve(
+        self,
+        prompts: Sequence[np.ndarray],
+        slots: int = 4,
+        max_new: Optional[Sequence[int]] = None,
+        rng=None,
+    ) -> List[np.ndarray]:
+        """Serve a request queue with continuous batching.
+
+        ``prompts``: per-request 1-D int32 token arrays (ragged lengths).
+        ``max_new``: optional per-request new-token budgets (default: the
+        engine's ``max_new_tokens``). Returns the generated tokens per
+        request, in the original request order, truncated at EOS.
+
+        Requests are admitted in globally length-sorted order (one BSP sort
+        through the capacity ladder); a slot that retires — EOS or budget —
+        is refilled from the queue *between* decode steps, so short
+        sequences never hold the batch hostage (``self.refills`` counts
+        these mid-flight admissions).
+        """
+        rng = rng if rng is not None else jax.random.key(0)
+        reqs = [np.asarray(p, np.int32) for p in prompts]
+        if not reqs:
+            return []
+        budgets = (
+            [int(m) for m in max_new]
+            if max_new is not None
+            else [self.scfg.max_new_tokens] * len(reqs)
+        )
+        assert len(budgets) == len(reqs)
+        outs: List[List[int]] = [[] for _ in reqs]
+        # one fixed cache length for every lane: the longest prompt plus the
+        # largest budget (decode positions are per-slot, masked by pos),
+        # rounded up to a power of two so varying traffic compiles O(log n)
+        # decode/prefill programs instead of one per distinct workload mix
+        # (same rationale as the n_p bucketing in data/pipeline.py)
+        cache_len = max(len(r) for r in reqs) + max(max(budgets), 1)
+        cache_len = max(64, 1 << (cache_len - 1).bit_length())
+        queue = list(self.admission_order([len(r) for r in reqs]))
+
+        def next_rid() -> Optional[int]:
+            # zero-budget requests retire instantly with an empty stream —
+            # they never occupy a slot or emit a prefill-sampled token
+            while queue:
+                rid = queue.pop(0)
+                if budgets[rid] > 0:
+                    return rid
+            return None
+
+        def admit(rid: int, k: jax.Array):
+            cache, logits = self._prefill_one(reqs[rid], cache_len)
+            return cache, self._sample(logits, k)[0]
+
+        # initial fill: one prefill per slot, stacked into slot lanes
+        caches, toks, slot_req = [], [], []
+        while len(slot_req) < max(1, slots):
+            rid = next_rid()
+            if rid is None:
+                break
+            slot_req.append(rid)
+            rng = jax.random.fold_in(rng, len(slot_req))
+            cache, tok = admit(rid, rng)
+            caches.append(cache)
+            toks.append(tok)
+        if not slot_req:  # every request had a zero budget
+            return [np.asarray(t, np.int32) for t in outs]
+        n_slots = len(slot_req)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        tok = jnp.stack(toks)[:, None]  # (slots, 1) — batch-1 lanes
+
+        step = 0
+        while any(r is not None for r in slot_req):
+            # record the sampled token per lane; retire finished requests and
+            # refill their slot from the queue. A freshly admitted request's
+            # first token comes from its own prefill logits and is recorded
+            # immediately (cascading, in case a 1-token budget or instant
+            # EOS retires it before ever taking a decode step).
+            tok_host = np.asarray(tok[:, 0])
+            for s in range(n_slots):
+                tval = int(tok_host[s])
+                while slot_req[s] is not None:
+                    rid = slot_req[s]
+                    outs[rid].append(tval)
+                    done = (
+                        tval == self.scfg.eos_id
+                        or len(outs[rid]) >= budgets[rid]
+                    )
+                    if not done:
+                        break
+                    slot_req[s] = None
+                    nxt = next_rid()
+                    if nxt is None:
+                        break
+                    slot_req[s] = nxt
+                    self.refills += 1
+                    rng = jax.random.fold_in(rng, 1000 + step * n_slots + s)
+                    cache_s, tok_s = admit(nxt, rng)
+                    caches = jax.tree.map(
+                        lambda full, one: full.at[s].set(one), caches, cache_s
+                    )
+                    tok = tok.at[s, 0].set(tok_s)
+                    tval = int(tok_s)
+            if not any(r is not None for r in slot_req):
+                break
+            # one vmapped decode step for every lane (retired-and-unrefilled
+            # lanes keep decoding into scratch — their output is ignored)
+            logits, caches = self._decode_slots(self.params, caches, tok)
+            rng = jax.random.fold_in(rng, step)
+            tok = self._sample(logits.reshape(n_slots, -1), rng)[:, None]
+            step += 1
+
+        def trim(t: List[int]) -> np.ndarray:
+            if self.scfg.eos_id in t:
+                t = t[: t.index(self.scfg.eos_id) + 1]
+            return np.asarray(t, np.int32)
+
+        return [trim(t) for t in outs]

@@ -43,6 +43,32 @@ def test_sharded_sort_equals_simulated():
     assert "OK" in out
 
 
+def test_sharded_safe_driver_resumes_and_caches_shard_map():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core import SortConfig, SortExecutor, bsp_sort_sharded_safe, gathered_output
+        p, n_p = 8, 2048
+        mesh = Mesh(np.array(jax.devices()), ("procs",))
+        xadv = jnp.asarray(np.repeat((np.arange(p, dtype=np.int32) * 1000)[:, None], n_p, axis=1))
+        cfg = SortConfig(p=p, n_per_proc=n_p, algorithm="iran", pair_capacity="whp")
+        ex = SortExecutor()
+        res, _, st = bsp_sort_sharded_safe(xadv, mesh, "procs", cfg, executor=ex)
+        assert st.retries >= 1, st.as_row()  # escalated past whp
+        assert np.array_equal(gathered_output(res), np.sort(np.asarray(xadv).ravel()))
+        # regression: repeated calls with the same mesh/cfg must NOT rebuild
+        # shard_map — the executor's counting wrapper sees zero new traces
+        first = dict(ex.trace_counts)
+        assert all(v == 1 for v in first.values()), first
+        res2, _, st2 = bsp_sort_sharded_safe(xadv, mesh, "procs", cfg, executor=ex)
+        assert dict(ex.trace_counts) == first, (ex.trace_counts, first)
+        # one shared prepare callable across all rungs of the ladder
+        assert sum(1 for k in first if k[0] == "prepare") == 1
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_moe_ep_sharded_matches_dense_reference():
     out = _run("""
         import dataclasses, numpy as np, jax, jax.numpy as jnp

@@ -70,6 +70,39 @@ def test_ep_single_device_path_matches_dense():
     )
 
 
+def test_ep_safe_escalates_capacity_instead_of_dropping():
+    """EP dispatch through the sort driver's tier ladder: an undersized
+    capacity_factor is a retriable fault, not silent token drop — the ladder
+    escalates to the full tier and the output still matches dense."""
+    cfg, lp, x = _setup()
+    ref = _dense_reference(cfg, lp, x)
+    got, aux, stats = moe_mod.moe_ep_safe(
+        lp, x, cfg, moe_mod.MoEMeshInfo(), capacity_factor=0.01
+    )
+    assert not bool(aux["overflow"])
+    assert stats.retries >= 1 and stats.last_tier == "full", stats.as_row()
+    assert stats.attempts.get("whp") == 1  # the guess was tried exactly once
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_ep_safe_benign_capacity_stays_on_whp_tier():
+    """With ample capacity the ladder must not escalate, and TierStats rows
+    stay driver-compatible (same counters the serve engine consumes)."""
+    cfg, lp, x = _setup()
+    got, aux, stats = moe_mod.moe_ep_safe(
+        lp, x, cfg, moe_mod.MoEMeshInfo(), capacity_factor=4.0
+    )
+    assert stats.retries == 0 and stats.last_tier == "whp"
+    row = stats.as_row()
+    assert row["tier_whp"] == 1 and row["ok_whp"] == 1 and row["retries"] == 0
+    ref = _dense_reference(cfg, lp, x)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=3e-2, rtol=3e-2
+    )
+
+
 def test_router_aux_losses_shapes():
     cfg, lp, x = _setup()
     _, aux = moe_mod.moe_tp(lp, x, cfg)

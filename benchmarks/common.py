@@ -15,8 +15,10 @@ paper's own T3D constants, which reproduces the paper's §6 numbers.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +76,39 @@ def fmt_row(cells: List, widths=None) -> str:
     return ",".join(str(c) for c in cells)
 
 
+#: every emitted row of the current process, in emit order — the JSON
+#: trajectory writer (benchmarks.run --json OUT) drains this.
+ROWS: List[Tuple[str, Dict]] = []
+
+
 def emit(table: str, row: Dict):
     """CSV line: table,key=value,... (greppable, machine-readable)."""
+    ROWS.append((table, dict(row)))
     print(f"{table}," + ",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+
+
+def write_json(out_dir: str) -> List[str]:
+    """Write every collected table as ``OUT/BENCH_<table>.json``.
+
+    One file per table, rows in emit order with keys sorted — inputs are
+    seeded, so reruns differ only in the timing fields, which is what makes
+    the files a diffable perf trajectory. Returns the written paths.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    by_table: Dict[str, List[Dict]] = {}
+    for table, row in ROWS:
+        by_table.setdefault(table, []).append(row)
+    paths = []
+    for table, rows in sorted(by_table.items()):
+        path = os.path.join(out_dir, f"BENCH_{table}.json")
+        with open(path, "w") as f:
+            json.dump(
+                {"table": table, "rows": rows},
+                f,
+                indent=1,
+                sort_keys=True,
+                default=str,
+            )
+            f.write("\n")
+        paths.append(path)
+    return paths

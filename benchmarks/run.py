@@ -1,11 +1,14 @@
 """Benchmark harness — one function per paper table. CSV to stdout.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--tables table1,table3]
+                                            [--json OUT]
 
 Default (quick) sizes keep a single-CPU-core run to a few minutes; --full
-uses the paper's 1M/4M/8M sizes. The simulated-processor methodology and the
-predicted-vs-observed framing are described in benchmarks/common.py and
-EXPERIMENTS.md §Paper-validation.
+uses the paper's 1M/4M/8M sizes. ``--json OUT`` additionally writes every
+emitted row as ``OUT/BENCH_<table>.json`` (inputs are seeded, so the files
+form a diffable perf trajectory across commits). The simulated-processor
+methodology and the predicted-vs-observed framing are described in
+benchmarks/common.py and EXPERIMENTS.md §Paper-validation.
 """
 from __future__ import annotations
 
@@ -14,7 +17,7 @@ import sys
 import time
 
 from benchmarks import tables
-from benchmarks.common import emit, t_comp_per_cmp
+from benchmarks.common import emit, t_comp_per_cmp, write_json
 
 M = 1 << 20
 
@@ -23,6 +26,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-size inputs (1M/4M/8M)")
     ap.add_argument("--tables", type=str, default="all")
+    ap.add_argument(
+        "--json", type=str, default=None, metavar="OUT",
+        help="also write BENCH_<table>.json files into the OUT directory",
+    )
     args = ap.parse_args()
 
     if args.full:
@@ -64,6 +71,12 @@ def main() -> None:
     go("duplicates", tables.table_duplicate_handling_overhead, M // 4)
     go("capacity", tables.table_capacity_retry, M // 4 if not args.full else 4 * M,
        p=16 if not args.full else 64)
+    go("service", tables.table_service, n_requests=64,
+       total=M // 16 if not args.full else M, p=8 if not args.full else 16)
+
+    if args.json:
+        for path in write_json(args.json):
+            emit("meta", {"json": path})
 
 
 if __name__ == "__main__":

@@ -255,6 +255,71 @@ def table_capacity_retry(n, p=16, variants=("RSQ", "RSR", "DSQ")):
             )
 
 
+def table_service(n_requests=64, total=1 << 16, p=8, mixes=("U", "G", "B", "DD", "zipf")):
+    """Sort-service dispatch: fused segmented sort vs per-request sorts.
+
+    A mixed-size batch of ``n_requests`` concurrent sort requests (sizes
+    Zipf-skewed — a few big, a long tail of tiny) per key mix. ``fused``
+    packs the whole batch into one tagged segmented BSP sort through the
+    service's batch former; ``per_req`` dispatches each request as its own
+    batch (``max_batch_keys=1``) — the pre-service regime where every small
+    request pays a full p-lane sort plus its own escalation walk.
+
+    ``*_buckets`` counts the distinct compiled (n_per_proc) shapes each
+    path touched: the fused path compiles the segmented sort once per pow2
+    bucket while per-request dispatch compiles one ladder per request-size
+    bucket. Warmed before timing, so ``speedup`` is dispatch + sort work,
+    not compile amortization.
+    """
+    from repro.core.api import SortExecutor
+    from repro.service import ServiceConfig, SortService
+    from benchmarks.common import REPEATS
+
+    sizes = datagen.zipf_sizes(n_requests, total, seed=21)
+    for mix in mixes:
+        arrays = [
+            datagen.generate(mix, 1, int(s), seed=100 + i)[0]
+            for i, s in enumerate(sizes)
+        ]
+
+        def timed(svc_cfg, ex):
+            SortService(svc_cfg, executor=ex).sort_many(arrays)  # warm/compile
+            ts, svc = [], None
+            for _ in range(REPEATS):
+                svc = SortService(svc_cfg, executor=ex)
+                t0 = time.time()
+                svc.sort_many(arrays)
+                ts.append(time.time() - t0)
+            return float(np.mean(ts)), svc, ex
+
+        ex_f = SortExecutor()
+        t_fused, svc_f, _ = timed(
+            ServiceConfig(p=p, max_batch_keys=2 * total), ex_f
+        )
+        ex_r = SortExecutor()
+        t_per, svc_r, _ = timed(ServiceConfig(p=p, max_batch_keys=1), ex_r)
+        buckets = lambda ex: len({k[2].n_per_proc for k in ex.trace_counts})
+        lat = np.asarray(svc_f.latencies[-n_requests:], np.float64)
+        emit(
+            "service",
+            {
+                "mix": mix, "n_req": n_requests, "keys": total, "p": p,
+                "wall_fused_s": round(t_fused, 4),
+                "wall_per_req_s": round(t_per, 4),
+                "speedup": round(t_per / max(t_fused, 1e-9), 2),
+                "fused_keys_per_s": int(total / max(t_fused, 1e-9)),
+                "per_req_keys_per_s": int(total / max(t_per, 1e-9)),
+                "fused_buckets": buckets(ex_f),
+                "per_req_buckets": buckets(ex_r),
+                "fused_batches": svc_f.batches_dispatched,
+                "served_by": svc_f.stats.last_tier,
+                "lat_p99_ms": round(float(np.quantile(lat, 0.99)) * 1e3, 2),
+                "retries_fused": svc_f.stats.retries,
+                "retries_per_req": svc_r.stats.retries,
+            },
+        )
+
+
 def table_duplicate_handling_overhead(n, p=64):
     """§6.1: duplicate handling costs 3-6%; compare [U] vs all-duplicates."""
     fn, cfg = _sort_fn(p, n // p, algorithm="det", local_sort="lax")

@@ -12,7 +12,11 @@ Public API:
     TierStats                     — per-tier retry counters for the drivers
     phase_fns                     — per-phase callables (paper Tables 4-7)
     predict, BSPMachine, CRAY_T3D — BSP (p, L, g) cost model (§1.1, Props 5.1/5.3)
-    datagen                       — §6.3 benchmark input distributions
+    datagen                       — §6.3 benchmark input distributions (+ zipf)
+    pack_segments, sort_segments,
+    segmented_sort_safe           — segmented sort: many requests fused into
+                                    one (segment_id, key)-tagged BSP sort
+                                    (the repro.service layer's engine)
 """
 from .api import (
     SortExecutor,
@@ -29,6 +33,13 @@ from .api import (
     spmd_sort_fn,
 )
 from .bsp import BSPMachine, CRAY_T3D, Prediction, predict, theoretical_max_imbalance
+from .segmented import (
+    PackedSegments,
+    SegmentedResult,
+    pack_segments,
+    segmented_sort_safe,
+    sort_segments,
+)
 from .types import AXIS, PreparedSort, SortConfig, SortResult, sentinel_for
 
 from . import datagen  # noqa: F401
@@ -37,8 +48,10 @@ __all__ = [
     "AXIS",
     "BSPMachine",
     "CRAY_T3D",
+    "PackedSegments",
     "Prediction",
     "PreparedSort",
+    "SegmentedResult",
     "SortConfig",
     "SortExecutor",
     "SortResult",
@@ -50,9 +63,12 @@ __all__ = [
     "datagen",
     "default_executor",
     "gathered_output",
+    "pack_segments",
     "phase_fns",
     "predict",
+    "segmented_sort_safe",
     "sentinel_for",
+    "sort_segments",
     "spmd_prepare_fn",
     "spmd_route_fn",
     "spmd_sort_fn",

@@ -45,6 +45,30 @@ exposed via :func:`phase_fns`; they are a thin view over the same pipeline
 stage functions (``local_sort`` / ``splitters.splitter_stage`` /
 ``searchsorted_tagged`` / ``routing.route`` / ``merge``), not a parallel
 reimplementation.
+
+The service layer — many concurrent sorts as one
+------------------------------------------------
+Above these drivers sits the *sort service* (``repro.service``), the layer
+consumers use when traffic is many small/ragged requests rather than one
+big array:
+
+* **segment tagging** (``core/segmented.py``) — a batch of R requests is
+  fused into ONE sort by lifting each key to the int64 composite
+  ``(segment_id << 32) | biased(key)``: the paper's §5.1.1 duplicate tag
+  generalized to a segment tag. One balanced sort returns every segment
+  contiguous and sorted, with splitters drawn from the shared oversample
+  landing inside each segment in proportion to its size;
+* **batch former** (``service/batch.py``) — ragged requests are packed
+  greedily (FIFO) into batches quantized to power-of-two
+  ``n_per_proc`` buckets, so arbitrary traffic shares O(log n) compiled
+  programs through this module's :class:`SortExecutor` registry;
+* **escalation per batch** (``service/service.py``) — each fused batch
+  runs through :func:`bsp_sort_safe`'s capacity ladder independently, so
+  an adversarial request escalates only its own batch, and per-request
+  latency plus :class:`TierStats` counters surface as service telemetry.
+
+Serve admission ordering (``serve/engine.py``) and data-pipeline length
+bucketing (``data/pipeline.py``) are service consumers.
 """
 from __future__ import annotations
 

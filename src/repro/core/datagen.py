@@ -4,6 +4,16 @@ Seven generators producing the (p, n_per_proc) int32 global layout. The
 paper's [Z]/[RD] sets are omitted by the paper's own choice (§6.3: results
 match [DD]/[WR] and are never worse than [U]).
 
+Two service-workload additions beyond the paper's sets (the sort-service
+benchmark sorts *many small requests*, a regime §6.3 never exercises):
+
+* ``zipf`` / :func:`zipf_keys` — duplicate-heavy Zipf-distributed keys
+  (heavy head: a handful of values covers most of the mass — the §5.1.1
+  duplicate-tagging stress in its naturally occurring form);
+* :func:`zipf_sizes` — skewed *request-size* mix for a batch of concurrent
+  sort requests (sizes ∝ rank^-alpha: a few big requests, a long tail of
+  tiny ones — the fusion win case).
+
 INT_MAX = 2^31 (values in [0, 2^31 - 1], 32-bit signed — paper's setting).
 """
 from __future__ import annotations
@@ -113,6 +123,51 @@ def worst_regular(p: int, n_p: int, seed: int = 0) -> np.ndarray:
     return ((j * p + i) * scale).astype(np.int32)
 
 
+def zipf_keys(p: int, n_p: int, seed: int = 0, alpha: float = 1.5) -> np.ndarray:
+    """[zipf] — duplicate-heavy keys, frequency of value v ∝ v^-alpha.
+
+    The head values repeat across every processor (unlike [DD]'s per-proc
+    blocks), so both the splitter tagging and the routing see naturally
+    colliding duplicates.
+    """
+    return np.stack(
+        [np.minimum(r.zipf(alpha, n_p), INT_MAX - 1) for r in _rngs(p, seed)]
+    ).astype(np.int32)
+
+
+def zipf_sizes(
+    n_requests: int, total: int, seed: int = 0, alpha: float = 1.2
+) -> np.ndarray:
+    """Skewed request-size mix: size of rank-r request ∝ r^-alpha, shuffled.
+
+    Deterministic in ``seed``; sizes are ≥ 1 and sum exactly to ``total``
+    (the residual lands on the largest request). Models the serving-side
+    regime of a few big sorts amid a long tail of tiny ones.
+    """
+    assert total >= n_requests >= 1
+    w = 1.0 / np.arange(1, n_requests + 1, dtype=np.float64) ** alpha
+    sizes = np.maximum((w / w.sum() * total).astype(np.int64), 1)
+    # clamping the tail to >= 1 can overshoot ``total`` (when total is close
+    # to n_requests most floor-shares are 0): shave the excess off the
+    # largest entries, never below 1 — total >= n_requests guarantees the
+    # shave terminates. Any rounding shortfall lands on the largest request.
+    excess = int(sizes.sum()) - total
+    order = np.argsort(-sizes)
+    i = 0
+    while excess > 0:
+        j = order[i % n_requests]
+        take = min(excess, int(sizes[j]) - 1)
+        sizes[j] -= take
+        excess -= take
+        i += 1
+    if excess < 0:
+        sizes[order[0]] -= excess
+    assert sizes.min() >= 1 and sizes.sum() == total
+    rng = np.random.default_rng(seed + 21)
+    rng.shuffle(sizes)
+    return sizes
+
+
 DISTRIBUTIONS = {
     "U": uniform,
     "G": gaussian,
@@ -121,6 +176,7 @@ DISTRIBUTIONS = {
     "S": staggered,
     "DD": deterministic_duplicates,
     "WR": worst_regular,
+    "zipf": zipf_keys,
 }
 
 

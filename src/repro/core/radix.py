@@ -16,24 +16,29 @@ import jax.numpy as jnp
 
 
 def _to_unsigned_order_preserving(keys: jnp.ndarray) -> jnp.ndarray:
-    """Map keys to uint32 preserving order (bias sign bit for signed ints)."""
+    """Map keys to a same-width unsigned dtype preserving order (bias the
+    sign bit for signed ints). Width-generic: 64-bit keys — e.g. the
+    segmented sort's (segment, key) composites — keep all their bits."""
+    nbits = jnp.dtype(keys.dtype).itemsize * 8
+    udtype = jnp.dtype(f"uint{nbits}")
     if jnp.issubdtype(keys.dtype, jnp.signedinteger):
-        return keys.astype(jnp.uint32) ^ jnp.uint32(0x80000000)
-    return keys.astype(jnp.uint32)
+        return keys.astype(udtype) ^ udtype.type(1 << (nbits - 1))
+    return keys.astype(udtype)
 
 
 def radix_argsort(keys: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
     """Stable argsort of integer keys via LSD counting passes.
 
     Each pass computes ranks with one-hot cumsums (stable), giving linear
-    total work ``O(n · 32/bits · 2^bits)`` vector ops.
+    total work ``O(n · w/bits · 2^bits)`` vector ops for w-bit keys.
     """
     assert jnp.issubdtype(keys.dtype, jnp.integer)
     u = _to_unsigned_order_preserving(keys)
+    nbits = jnp.dtype(u.dtype).itemsize * 8
     n = keys.shape[0]
     order = jnp.arange(n, dtype=jnp.int32)
-    for shift in range(0, 32, bits):
-        digits = ((u[order] >> jnp.uint32(shift)) & jnp.uint32((1 << bits) - 1)).astype(
+    for shift in range(0, nbits, bits):
+        digits = ((u[order] >> u.dtype.type(shift)) & u.dtype.type((1 << bits) - 1)).astype(
             jnp.int32
         )
         onehot = (
@@ -48,5 +53,5 @@ def radix_argsort(keys: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
 
 
 def radix_sort(keys: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
-    """Stable LSD radix sort of 32-bit integer keys (paper's radixsort)."""
+    """Stable LSD radix sort of integer keys (paper's radixsort)."""
     return keys[radix_argsort(keys, bits=bits)]

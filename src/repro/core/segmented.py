@@ -1,0 +1,289 @@
+"""Segmented BSP sort — many independent sorts fused into ONE tagged sort.
+
+The paper's transparent duplicate handling (§5.1.1) works by *tagging*:
+sample/splitter records carry explicit ``(processor, index)`` tags so the
+comparator is a total order even when every key is equal, and splitter
+selection stays balanced without doubling communication. The same mechanism
+generalizes to *segment* tags. A batch of R independent sort requests
+("segments") is fused into one BSP sort by lifting every key to the
+composite
+
+    comp = segment_id * 2^32 + (key + 2^31)        (int64, order-preserving)
+
+i.e. the pair ``(segment_id, key)`` compared lexicographically. One balanced
+sort of the composites returns every segment contiguous *and* sorted — the
+segment tag rides in the key's high bits exactly like the §5.1.1 duplicate
+tag rides in the comparator, and splitters drawn from the shared oversample
+of the composites automatically land inside each segment in proportion to
+its size, so a batch of many small/skewed requests is load-balanced as one
+n-key sort instead of R degenerate p-lane sorts (the regime where naive
+per-request sample sort collapses — Axtmann & Sanders 2016).
+
+Everything rides the existing machinery unchanged: the composite sort goes
+through :func:`repro.core.api.bsp_sort_safe`, so it inherits the resumable
+prepare/route phase pipeline, the capacity-tier escalation ladder
+(whp → whp×2 → exact → allgather) and the :class:`SortExecutor` compile
+cache — one compiled program per ``(p, n_per_proc)`` shape serves every
+batch that packs to that shape.
+
+Layout: ``pack_segments`` concatenates the ragged requests in submit order,
+pads the tail up to ``p * n_per_proc`` with composites of the
+past-the-last segment id (they sort after every real key), and deals the
+result row-major onto the ``(p, n_per_proc)`` global layout. A per-key
+``pos`` payload (the key's index *within its segment*) rides along, so the
+unpacked result carries each segment's stable argsort for free — packing
+preserves submit order and the whole pipeline is stable by
+(source proc, local index), hence equal keys keep their original
+within-segment order.
+
+Keys are int32 (the library's key dtype throughout datagen/benchmarks);
+segment count is bounded by 2^31 so the composite stays inside int64.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from .api import SortExecutor, TierStats, bsp_sort_safe, gathered_output
+from .types import SortConfig
+
+#: bits of the composite holding the (biased) key; segment id sits above.
+SEG_SHIFT = 32
+_KEY_BIAS = np.int64(1) << 31  # maps int32 -> [0, 2^32): order-preserving
+_KEY_MASK = (np.int64(1) << SEG_SHIFT) - 1
+
+
+def pack_keys(seg_ids: np.ndarray, keys: np.ndarray) -> np.ndarray:
+    """Lift (segment_id, int32 key) pairs to order-preserving int64 composites."""
+    seg = np.asarray(seg_ids, np.int64)
+    k = np.asarray(keys, np.int64)
+    return (seg << SEG_SHIFT) | (k + _KEY_BIAS)
+
+
+def unpack_keys(comp: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Invert :func:`pack_keys`: composites -> (segment ids, int32 keys)."""
+    comp = np.asarray(comp, np.int64)
+    seg = (comp >> SEG_SHIFT).astype(np.int32)
+    keys = ((comp & _KEY_MASK) - _KEY_BIAS).astype(np.int32)
+    return seg, keys
+
+
+def _pow2_n_per_proc(total: int, p: int, min_n_per_proc: int) -> int:
+    """Power-of-two per-proc run length covering ``total`` packed keys.
+
+    Each distinct n_per_proc is a distinct XLA compile of the whole tier
+    ladder; rounding to the next power of two bounds the compiled-program
+    count to O(log n) across arbitrary traffic (same rationale as the
+    serve-side cache_len bucketing).
+    """
+    per = max(1, -(-total // p))
+    return max(min_n_per_proc, 1 << (per - 1).bit_length())
+
+
+@dataclasses.dataclass
+class PackedSegments:
+    """A batch of ragged requests packed onto the (p, n_per_proc) layout.
+
+    Arrays stay host-side (numpy): device transfer happens inside the
+    sort's ``enable_x64`` scope — an eager ``jnp.asarray`` under the repo's
+    default 32-bit mode would truncate the int64 composites.
+
+    Single-segment batches (the serve-admission / data-bucketing hot path)
+    skip the composite lift entirely: a segment tag carries zero
+    information for R = 1, so ``comp`` holds the raw int32 keys (pads =
+    int32 max, which may collide with real keys — the unpack therefore
+    filters by the pos payload, not by value) and the sort runs in the
+    repo's native 32-bit mode at half the key bytes.
+    """
+
+    comp: np.ndarray  # (p, n_p) keys: int64 composites (R>1) / int32 (R=1)
+    pos: np.ndarray  # (p, n_p) int32 within-segment index (pads: -1)
+    sizes: Tuple[int, ...]  # true per-segment lengths, submit order
+    p: int
+    n_per_proc: int
+
+    @property
+    def n_keys(self) -> int:
+        return int(sum(self.sizes))
+
+
+def pack_segments(
+    arrays: Sequence[np.ndarray],
+    p: int,
+    *,
+    n_per_proc: Optional[int] = None,
+    min_n_per_proc: int = 8,
+) -> PackedSegments:
+    """Pack ragged int32 request arrays into one tagged (p, n_p) sort input.
+
+    ``n_per_proc`` defaults to the power-of-two bucket covering the batch
+    (see :func:`_pow2_n_per_proc`); passing it explicitly lets a batch
+    former pin the bucket. Pads carry segment id ``len(arrays)`` — strictly
+    above every real composite — so they sort to the global tail and the
+    valid prefix decodes exactly. Each lane gets an *even share* of the
+    real keys (submit-contiguous, so stability still reads in submit
+    order) with its own tail pads, rather than all pads piling onto the
+    last lanes: an all-pad lane is a constant run aimed at one routing
+    bucket, which would structurally fault the whp pair capacity even for
+    a single benign segment.
+    """
+    arrays = [np.asarray(a, np.int32).reshape(-1) for a in arrays]
+    sizes = tuple(int(a.shape[0]) for a in arrays)
+    total = sum(sizes)
+    n_p = n_per_proc or _pow2_n_per_proc(total, p, min_n_per_proc)
+    if p * n_p < total:
+        raise ValueError(f"batch of {total} keys exceeds p*n_per_proc={p * n_p}")
+    keys = (
+        np.concatenate(arrays) if arrays else np.zeros((0,), np.int32)
+    )
+    pos = np.concatenate(
+        [np.arange(s, dtype=np.int32) for s in sizes]
+        or [np.zeros((0,), np.int32)]
+    )
+    if len(arrays) == 1:  # hot path: no tag needed, sort raw int32 keys
+        comp = keys
+        pad_comp = np.iinfo(np.int32).max
+        comp_rows = np.full((p, n_p), pad_comp, np.int32)
+    else:
+        seg = np.repeat(np.arange(len(arrays), dtype=np.int64), sizes)
+        comp = pack_keys(seg, keys)
+        pad_comp = np.int64(len(arrays)) << SEG_SHIFT
+        comp_rows = np.full((p, n_p), pad_comp, np.int64)
+    pos_rows = np.full((p, n_p), -1, np.int32)
+    q, rem = divmod(total, p)
+    off = 0
+    for k in range(p):
+        c = q + (1 if k < rem else 0)
+        comp_rows[k, :c] = comp[off : off + c]
+        pos_rows[k, :c] = pos[off : off + c]
+        off += c
+    return PackedSegments(
+        comp=comp_rows,
+        pos=pos_rows,
+        sizes=sizes,
+        p=p,
+        n_per_proc=n_p,
+    )
+
+
+@dataclasses.dataclass
+class SegmentedResult:
+    """Per-segment outputs of one fused sort, in submit order."""
+
+    keys: List[np.ndarray]  # segment r's keys, sorted ascending
+    order: List[np.ndarray]  # stable argsort: keys[r] == input_r[order[r]]
+    stats: TierStats  # escalation counters of the fused sort
+    tier: Optional[str]  # capacity tier that served the batch
+    n_per_proc: int  # the pow2 bucket this batch compiled under
+
+
+def segmented_sort_safe(
+    packed: PackedSegments,
+    cfg: Optional[SortConfig] = None,
+    *,
+    rng: Optional[jax.Array] = None,
+    stats: Optional[TierStats] = None,
+    executor: Optional[SortExecutor] = None,
+    **overrides,
+) -> SegmentedResult:
+    """Sort every packed segment in one overflow-safe BSP sort.
+
+    The composite keys run through :func:`bsp_sort_safe` (prepare once,
+    re-enter route per capacity-ladder rung), with the within-segment index
+    as payload. Default config: randomized oversampling starting at the
+    *exact* pair capacity — contiguous segment packing makes every lane's
+    run value-clustered (it spans only a couple of segments), which
+    structurally violates the whp per-pair bound, so starting at whp would
+    just waste two executions per multi-segment batch. The receive side is
+    still the Claim 5.1 bound; a batch that overflows it (however skewed)
+    escalates to the allgather terminal tier instead of dropping keys.
+    """
+    if cfg is None:
+        cfg = SortConfig(
+            p=packed.p,
+            n_per_proc=packed.n_per_proc,
+            **{"algorithm": "iran", "pair_capacity": "exact", **overrides},
+        )
+    assert (cfg.p, cfg.n_per_proc) == (packed.p, packed.n_per_proc)
+    stats = stats if stats is not None else TierStats()
+    # Multi-segment composites need all 64 bits; the repo otherwise runs
+    # with JAX's default 32-bit mode, so x64 is enabled only around this
+    # sort. Every call (not just the first trace) must sit inside the
+    # scope — input canonicalization is per-call, and a 32-bit call would
+    # truncate the segment tags and retrace the executor's cached
+    # callables. Single-segment batches carry raw int32 keys and stay in
+    # native 32-bit mode.
+    scope = (
+        enable_x64()
+        if packed.comp.dtype == np.int64
+        else contextlib.nullcontext()
+    )
+    with scope:
+        res, vbufs, stats = bsp_sort_safe(
+            jnp.asarray(packed.comp),
+            cfg,
+            values=(jnp.asarray(packed.pos),),
+            rng=rng,
+            stats=stats,
+            executor=executor,
+        )
+    return _unpack_result(packed, res, vbufs, stats)
+
+
+def _unpack_result(packed: PackedSegments, res, vbufs, stats) -> SegmentedResult:
+    """Host-side: slice the fused sorted sequence back into segments."""
+    n = packed.n_keys
+    cnt = np.asarray(res.count)
+    pbuf = np.asarray(vbufs[0])
+    pos = np.concatenate([pbuf[k, : cnt[k]] for k in range(packed.p)])
+    flat = gathered_output(res)
+    if len(packed.sizes) == 1:
+        # int32 fast path: pads (= int32 max) may equal real keys and
+        # interleave with them among the global maxima, so filter by the
+        # pos payload instead of slicing a prefix. Dropping elements from
+        # a sorted sequence keeps it sorted, and real equal keys keep
+        # their (proc, idx) = submit order.
+        mask = pos >= 0
+        return SegmentedResult(
+            keys=[flat[mask]],
+            order=[pos[mask]],
+            stats=stats,
+            tier=stats.last_tier,
+            n_per_proc=packed.n_per_proc,
+        )
+    flat, pos = flat[:n], pos[:n]  # pad composites (seg = R) hold the tail
+    _, keys = unpack_keys(flat)
+    bounds = np.concatenate([[0], np.cumsum(packed.sizes)])
+    return SegmentedResult(
+        keys=[keys[bounds[r] : bounds[r + 1]] for r in range(len(packed.sizes))],
+        order=[pos[bounds[r] : bounds[r + 1]] for r in range(len(packed.sizes))],
+        stats=stats,
+        tier=stats.last_tier,
+        n_per_proc=packed.n_per_proc,
+    )
+
+
+def sort_segments(
+    arrays: Sequence[np.ndarray],
+    p: int = 8,
+    *,
+    n_per_proc: Optional[int] = None,
+    min_n_per_proc: int = 8,
+    stats: Optional[TierStats] = None,
+    executor: Optional[SortExecutor] = None,
+    rng: Optional[jax.Array] = None,
+    **overrides,
+) -> SegmentedResult:
+    """Convenience: pack + fused-sort + unpack a batch of ragged requests."""
+    packed = pack_segments(
+        arrays, p, n_per_proc=n_per_proc, min_n_per_proc=min_n_per_proc
+    )
+    return segmented_sort_safe(
+        packed, rng=rng, stats=stats, executor=executor, **overrides
+    )

@@ -7,7 +7,10 @@
   variable-length documents via the paper's distributed sort: keys =
   document lengths, payload = doc ids (SORT_IRAN_BSP, key-value form). This
   is the paper's technique as the data-layer feature: one balanced
-  communication round replaces a gather-sort-scatter shuffle.
+  communication round replaces a gather-sort-scatter shuffle. Routed
+  through the sort service (``repro.service``): the corpus is one segment
+  of a fused segmented sort, so a data-pipeline shuffle can share a batch
+  (and a compiled program bucket) with concurrent serving-side requests.
 """
 from __future__ import annotations
 
@@ -18,8 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core import TierStats, bsp_sort_safe
+from repro.core import TierStats
 from repro.models.layers import dtype_of
+from repro.service import ServiceConfig, SortService
 
 
 def synthetic_batch(
@@ -48,38 +52,33 @@ def length_bucketed_order(
     algorithm: str = "iran",
     seed: int = 0,
     stats: Optional[TierStats] = None,
+    service: Optional[SortService] = None,
 ) -> np.ndarray:
     """Return doc ids in globally length-sorted order using the BSP sort.
 
-    ``doc_lengths``: (n,) int32. The corpus is dealt to ``p`` simulated
-    processors, sorted by (length) with doc-id payload, and the
-    concatenated valid prefixes give the bucketing order — equal lengths
-    keep corpus order (stability = deterministic batch composition).
-
-    Runs through the overflow-safe driver: a skewed corpus (e.g. every doc
-    the same length) escalates the capacity tier instead of silently
-    dropping ids. Pass a ``TierStats`` to accumulate retry counters.
+    ``doc_lengths``: (n,) int32. The corpus goes through the sort service
+    as one segment of a fused segmented sort: dealt to ``p`` simulated
+    processors, sorted by (length) with the within-corpus index riding as
+    payload, the result's stable argsort IS the bucketing order — equal
+    lengths keep corpus order (stability = deterministic batch
+    composition). The service's pow2 batch former bounds the distinct
+    compiled programs to O(log n) across varying queue lengths, and its
+    overflow-safe per-batch escalation means a skewed corpus (e.g. every
+    doc the same length) climbs the capacity ladder instead of silently
+    dropping ids. Pass a ``TierStats`` to accumulate retry counters, or a
+    ``SortService`` to fuse with its queued requests — in which case the
+    service's own config governs algorithm/seed and its stats accumulate
+    the retries (``p`` must agree with the service's).
     """
-    n = doc_lengths.shape[0]
-    # round the per-proc run up to a power of two: queue length varies every
-    # serving step, and each distinct n_p is a distinct jit/XLA compile of
-    # the whole tier ladder — bucketing bounds that to O(log n) programs.
-    n_p = max(8, 1 << max(0, -(-n // p) - 1).bit_length())
-    pad = p * n_p - n
-    lengths = np.concatenate([doc_lengths, np.full(pad, np.iinfo(np.int32).max)])
-    ids = np.concatenate([np.arange(n, dtype=np.int32), np.full(pad, -1, np.int32)])
-    res, vals, _ = bsp_sort_safe(
-        jnp.asarray(lengths.reshape(p, n_p)),
-        algorithm=algorithm,
-        pair_capacity="whp",  # cheap production tier; ladder handles skew
-        values=(jnp.asarray(ids.reshape(p, n_p)),),
-        seed=seed,
-        stats=stats,
-    )
-    buf = np.asarray(vals[0])
-    cnt = np.asarray(res.count)
-    order = np.concatenate([buf[k, : cnt[k]] for k in range(p)])
-    return order[order >= 0]
+    if service is None:
+        service = SortService(
+            ServiceConfig(p=p, algorithm=algorithm, seed=seed), stats=stats
+        )
+    elif service.cfg.p != p:
+        raise ValueError(
+            f"service sorts with p={service.cfg.p}, caller asked for p={p}"
+        )
+    return service.sort_one(np.asarray(doc_lengths, np.int32)).order
 
 
 def batches_for_run(cfg: ArchConfig, shape: ShapeConfig, start_step: int, n_steps: int):

@@ -13,14 +13,19 @@ lowers. Two decode modes:
   steps: the new request is prefilled alone and its cache written into the
   retired slot's lane, while the other slots keep decoding uninterrupted.
 
-Admission ordering uses the BSP sort's overflow-safe driver
-(:meth:`ServeEngine.admission_order`): queued requests are globally sorted
-by prompt length so each admitted batch is length-homogeneous (minimal
-padding waste — and consecutive refills share prefill compile cache, since
-prefill is jitted per distinct prompt length). Production traffic is
-adversarial by nature — a burst of identical lengths aims every key at one
-bucket — so the sort runs through the capacity-escalation ladder and the
-engine keeps per-tier retry counters (``capacity_stats``) for observability.
+Admission ordering goes through the sort *service*
+(:meth:`ServeEngine.admission_order` → :class:`repro.service.SortService`):
+queued requests are globally sorted by prompt length so each admitted batch
+is length-homogeneous (minimal padding waste — and consecutive refills share
+prefill compile cache, since prefill is jitted per distinct prompt length).
+The service fuses the admission sort with any concurrently queued requests
+as one segment of a tagged segmented BSP sort, and its processor count is
+derived from the engine's mesh (the largest power of two ≤ the device
+count; 8 simulated lanes without a mesh) so sharded serving buckets for the
+actual topology. Production traffic is adversarial by nature — a burst of
+identical lengths aims every key at one bucket — so every batch runs the
+capacity-escalation ladder and the engine's per-tier retry counters
+(``capacity_stats``, shared with the service) stay observable.
 """
 from __future__ import annotations
 
@@ -36,6 +41,21 @@ from repro.core import TierStats
 from repro.data import length_bucketed_order
 from repro.models import Model
 from repro.serve.sampling import sample
+from repro.service import ServiceConfig, SortService
+
+
+def _mesh_sort_p(mesh) -> int:
+    """Simulated-processor count for the engine's sort service.
+
+    The largest power of two ≤ the mesh's device count (``SortConfig``
+    requires pow2 ``p``); 8 lanes for the single-host no-mesh reference —
+    a hardcoded 8 on a sharded engine would silently bucket admission for
+    the wrong processor count.
+    """
+    if mesh is None:
+        return 8
+    nd = int(np.asarray(mesh.devices).size)
+    return max(1, 1 << (nd.bit_length() - 1))
 
 
 @dataclasses.dataclass
@@ -54,6 +74,12 @@ class ServeEngine:
         self.scfg = serve_cfg
         self.mesh = mesh
         self.capacity_stats = TierStats()  # sort-driver retry counters
+        self.sort_p = _mesh_sort_p(mesh)
+        # admission sorts go through the service: fused segmented dispatch,
+        # pow2-bucketed compiles, escalation stats shared with the engine
+        self.sort_service = SortService(
+            ServiceConfig(p=self.sort_p), stats=self.capacity_stats
+        )
         self.refills = 0  # queue admissions into retired decode slots
         self._decode = jax.jit(
             lambda p, c, t: model.decode_step(p, c, t, None)
@@ -68,17 +94,22 @@ class ServeEngine:
         )
         self._prefill_jits: Dict[tuple, object] = {}  # per (prompt_len, cache_len)
 
-    def admission_order(self, prompt_lengths, p: int = 8) -> np.ndarray:
+    def admission_order(self, prompt_lengths, p: Optional[int] = None) -> np.ndarray:
         """Globally length-sorted admission order for a request queue.
 
-        One balanced BSP sort over ``p`` simulated processors replaces the
-        scheduler's gather-sort-scatter; the overflow-safe driver guarantees
-        no request id is ever dropped even when every prompt has the same
-        length (the all-keys-to-one-bucket adversarial case). Retry activity
-        accumulates in ``self.capacity_stats``.
+        One balanced BSP sort (fused through the engine's sort service)
+        replaces the scheduler's gather-sort-scatter; the overflow-safe
+        per-batch escalation guarantees no request id is ever dropped even
+        when every prompt has the same length (the all-keys-to-one-bucket
+        adversarial case). Retry activity accumulates in
+        ``self.capacity_stats``. ``p`` defaults to the mesh-derived
+        ``self.sort_p``; an explicit override takes a one-off service so
+        the engine's compiled-bucket cache keying stays consistent.
         """
         lengths = np.asarray(prompt_lengths, np.int32)
-        return length_bucketed_order(lengths, p=p, stats=self.capacity_stats)
+        if p is not None and p != self.sort_p:
+            return length_bucketed_order(lengths, p=p, stats=self.capacity_stats)
+        return self.sort_service.sort_one(lengths).order
 
     def generate(self, prompts: jnp.ndarray, extras: Optional[Dict] = None, rng=None):
         """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32."""

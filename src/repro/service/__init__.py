@@ -1,0 +1,24 @@
+"""Sort service — fuse many concurrent ragged sort requests into one
+tagged, segmented BSP sort (the layer between the sort library and its
+serving/data consumers).
+
+    SortService    — request queue + dispatch: submit ragged int32 arrays,
+                     flush() packs them into pow2-bucketed batches, runs one
+                     overflow-safe segmented sort per batch, and returns
+                     every request sorted with its stable argsort, latency
+                     and capacity-tier telemetry.
+    BatchFormer    — the pow2 length-bucketed batch former (bounds XLA
+                     recompiles to one program per bucket shape).
+    ServiceConfig  — p / algorithm / capacity-tier / bucketing knobs.
+    RequestResult  — per-request output record.
+"""
+from .batch import Batch, BatchFormer
+from .service import RequestResult, ServiceConfig, SortService
+
+__all__ = [
+    "Batch",
+    "BatchFormer",
+    "RequestResult",
+    "ServiceConfig",
+    "SortService",
+]

@@ -1,0 +1,223 @@
+"""SortService — request queue + fused dispatch over the segmented BSP sort.
+
+Consumers (serve admission ordering, data-pipeline length bucketing, MoE-ish
+"sort these ids by key" callers) each used to run one whole BSP sort per
+array: a small request wastes the p-lane mesh, and every distinct length
+risks a recompile. The service turns that regime into a first-class
+workload:
+
+* ``submit(keys)`` queues a ragged int32 request and returns a request id;
+* ``flush()`` packs the queue into pow2-bucketed batches
+  (:class:`repro.service.batch.BatchFormer`), runs ONE overflow-safe
+  segmented sort per batch (`repro.core.segmented` — the (segment, key)
+  tagged fusion of every request in the batch), and returns every
+  *unclaimed* result. Completed results stay in the service's store until
+  claimed (``take_result`` / ``sort_one`` / ``sort_many``), so a request
+  piggybacked onto another caller's flush is never lost;
+* escalation is per batch through ``bsp_sort_safe``'s capacity-tier
+  ladder, so one adversarial request escalates only its own batch. The
+  starting tier is picked per batch (``pair_capacity="auto"``): a
+  single-segment batch runs the classic cheap regime whp → whp×2 → exact
+  → allgather, while a multi-segment batch starts at exact → allgather —
+  contiguous segment packing value-clusters every lane's run, which
+  structurally violates the whp per-pair bound, so whp rungs would only
+  waste full sort executions there;
+* telemetry: per-request wall latency (submit → result), the accumulated
+  :class:`TierStats` of every escalation, per-bucket batch counts, and the
+  shared :class:`SortExecutor`'s trace counts for compile-reuse assertions.
+
+One process-wide default executor serves all services, so every service
+instance (and every other sort caller) shares compiled programs per bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import TierStats
+from repro.core.api import SortExecutor, default_executor
+from repro.core.segmented import pack_segments, segmented_sort_safe
+from repro.service.batch import BatchFormer
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Static service knobs; the sort fields mirror SortConfig's."""
+
+    p: int = 8  # simulated-processor lanes per fused sort
+    algorithm: str = "iran"  # randomized oversampling: production default
+    # First capacity tier, resolved per batch when "auto":
+    # * single-segment batch → "whp": the classic cheap production regime
+    #   (each lane holds an even, distribution-representative share);
+    # * multi-segment batch → "exact": contiguous segment packing
+    #   value-clusters each lane's run (it spans only a couple of
+    #   segments and routes almost whole to one or two destinations,
+    #   where the whp bound assumes per-pair shares near n/p²), so the
+    #   whp rungs would fault structurally and waste two full sort
+    #   executions per batch before exact serves.
+    # An explicit "whp"/"exact" pins the starting tier for every batch.
+    pair_capacity: str = "auto"
+    local_sort: str = "lax"
+    max_batch_keys: int = 1 << 16  # batch former's packing cap
+    min_n_per_proc: int = 8
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """One request's output: sorted keys + stable argsort + telemetry."""
+
+    rid: int
+    keys: np.ndarray  # sorted ascending
+    order: np.ndarray  # stable argsort: input[order] == keys
+    tier: Optional[str]  # capacity tier that served this request's batch
+    n_per_proc: int  # pow2 bucket the batch compiled under
+    latency_s: float  # submit -> result wall time
+
+
+@dataclasses.dataclass
+class _Pending:
+    rid: int
+    keys: np.ndarray
+    submitted_at: float
+
+
+class SortService:
+    def __init__(
+        self,
+        cfg: ServiceConfig = ServiceConfig(),
+        *,
+        executor: Optional[SortExecutor] = None,
+        stats: Optional[TierStats] = None,
+    ) -> None:
+        self.cfg = cfg
+        self.executor = executor if executor is not None else default_executor()
+        self.stats = stats if stats is not None else TierStats()
+        self.former = BatchFormer(
+            cfg.p, cfg.max_batch_keys, cfg.min_n_per_proc
+        )
+        self._pending: List[_Pending] = []
+        self._completed: Dict[int, RequestResult] = {}  # unclaimed results
+        self._next_rid = 0
+        # telemetry
+        self.latencies: List[float] = []  # per-request, completion order
+        self.batches_dispatched = 0
+        self.keys_sorted = 0
+        self.bucket_counts: Dict[int, int] = {}  # n_per_proc -> batches
+
+    # ------------------------------------------------------------- queue
+    def submit(self, keys: np.ndarray) -> int:
+        """Queue one ragged request (1-D int32 keys); returns its id."""
+        arr = np.asarray(keys, np.int32).reshape(-1)
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(_Pending(rid, arr, time.perf_counter()))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # ---------------------------------------------------------- dispatch
+    def flush(self) -> Dict[int, RequestResult]:
+        """Sort everything queued; one fused segmented sort per batch.
+
+        Returns every unclaimed result — the newly completed ones plus any
+        earlier completion not yet taken (a request fused into another
+        caller's flush stays claimable). Claiming (``take_result`` /
+        ``sort_one`` / ``sort_many``) removes a result from the store.
+        """
+        todo, self._pending = self._pending, []
+        results = self._completed
+        submitted = {r.rid: r.submitted_at for r in todo}
+        completed_rids = set()
+        try:
+            for batch in self.former.form([(r.rid, r.keys) for r in todo]):
+                packed = pack_segments(
+                    batch.arrays,
+                    self.cfg.p,
+                    n_per_proc=batch.n_per_proc,
+                    min_n_per_proc=self.cfg.min_n_per_proc,
+                )
+                pair_capacity = self.cfg.pair_capacity
+                if pair_capacity == "auto":
+                    pair_capacity = (
+                        "whp" if len(batch.arrays) == 1 else "exact"
+                    )
+                seg = segmented_sort_safe(
+                    packed,
+                    algorithm=self.cfg.algorithm,
+                    pair_capacity=pair_capacity,
+                    local_sort=self.cfg.local_sort,
+                    seed=self.cfg.seed,
+                    stats=self.stats,  # accumulates across batches/calls
+                    executor=self.executor,
+                )
+                self.batches_dispatched += 1
+                self.keys_sorted += batch.total_keys
+                self.bucket_counts[batch.n_per_proc] = (
+                    self.bucket_counts.get(batch.n_per_proc, 0) + 1
+                )
+                done = time.perf_counter()
+                for rid, keys, order in zip(batch.rids, seg.keys, seg.order):
+                    lat = done - submitted[rid]
+                    self.latencies.append(lat)
+                    results[rid] = RequestResult(
+                        rid=rid,
+                        keys=keys,
+                        order=order,
+                        tier=seg.tier,
+                        n_per_proc=seg.n_per_proc,
+                        latency_s=lat,
+                    )
+                completed_rids.update(batch.rids)
+        finally:
+            # an admitted request may never be dropped: if a batch raised
+            # (XLA OOM, backend error), everything not yet completed goes
+            # back to the queue head for the next flush
+            if len(completed_rids) < len(todo):
+                self._pending = [
+                    r for r in todo if r.rid not in completed_rids
+                ] + self._pending
+        return dict(results)
+
+    def take_result(self, rid: int) -> RequestResult:
+        """Claim (remove) one completed result; flushes it if still queued."""
+        if rid not in self._completed and any(
+            r.rid == rid for r in self._pending
+        ):
+            self.flush()
+        return self._completed.pop(rid)
+
+    # ------------------------------------------------------ conveniences
+    def sort_many(self, arrays: Sequence[np.ndarray]) -> List[RequestResult]:
+        """Submit a batch of requests and flush; results in input order."""
+        rids = [self.submit(a) for a in arrays]
+        self.flush()
+        return [self._completed.pop(rid) for rid in rids]
+
+    def sort_one(self, keys: np.ndarray) -> RequestResult:
+        """Sort a single request through the service. It fuses with anything
+        already queued — and the piggybacked requests' results stay in the
+        store for their own callers (``flush``/``take_result``)."""
+        rid = self.submit(keys)
+        self.flush()
+        return self._completed.pop(rid)
+
+    def telemetry(self) -> Dict[str, object]:
+        """Flat snapshot for logs/benchmark rows."""
+        lat = np.asarray(self.latencies, np.float64)
+        row: Dict[str, object] = {
+            "requests": int(lat.size),
+            "batches": self.batches_dispatched,
+            "keys_sorted": self.keys_sorted,
+            "buckets": dict(sorted(self.bucket_counts.items())),
+        }
+        if lat.size:
+            row["lat_mean_ms"] = round(float(lat.mean()) * 1e3, 3)
+            row["lat_p99_ms"] = round(float(np.quantile(lat, 0.99)) * 1e3, 3)
+        row.update(self.stats.as_row())
+        return row

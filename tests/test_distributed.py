@@ -69,6 +69,38 @@ def test_sharded_safe_driver_resumes_and_caches_shard_map():
     assert "OK" in out
 
 
+def test_executor_mesh_keyed_cache_no_cross_mesh_reuse():
+    """Two different forced 8-device mesh layouts must get distinct sharded
+    cache entries (mesh is part of the key) and re-entry with either mesh
+    must hit its own entry — no cross-mesh reuse, no retrace. Scoped-down
+    single-host version of the ROADMAP multi-host registry validation."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core import SortConfig, SortExecutor, bsp_sort_sharded, gathered_output, datagen
+        p, n_p = 8, 512
+        devs = np.array(jax.devices())
+        mesh_a = Mesh(devs, ("procs",))
+        mesh_b = Mesh(devs[::-1].copy(), ("procs",))  # same devices, other layout
+        assert mesh_a != mesh_b
+        cfg = SortConfig(p=p, n_per_proc=n_p, algorithm="det")
+        ex = SortExecutor()
+        x = jnp.asarray(datagen.generate("U", p, n_p, seed=3))
+        ra, _ = bsp_sort_sharded(x, mesh_a, "procs", cfg, executor=ex)
+        rb, _ = bsp_sort_sharded(x, mesh_b, "procs", cfg, executor=ex)
+        keys = list(ex.trace_counts)
+        # one ("sort","sharded",cfg,nv,mesh,axis) entry per mesh, each traced once
+        assert len(keys) == 2 and all(v == 1 for v in ex.trace_counts.values()), ex.trace_counts
+        assert {k[4] for k in keys} == {mesh_a, mesh_b}
+        bsp_sort_sharded(x, mesh_a, "procs", cfg, executor=ex)
+        bsp_sort_sharded(x, mesh_b, "procs", cfg, executor=ex)
+        assert all(v == 1 for v in ex.trace_counts.values())  # cache hits only
+        assert np.array_equal(gathered_output(ra), gathered_output(rb))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_moe_ep_sharded_matches_dense_reference():
     out = _run("""
         import dataclasses, numpy as np, jax, jax.numpy as jnp

@@ -144,3 +144,36 @@ def test_serve_engine_admission_order_tracks_capacity_stats():
     # adversarial burst: every request the same length — ids must survive
     order2 = eng.admission_order(np.full(333, 512, np.int32))
     assert sorted(order2.tolist()) == list(range(333))
+
+
+def test_admission_sort_p_derives_from_mesh():
+    """The admission sort's processor count comes from the engine's mesh
+    (largest pow2 ≤ device count), not a hardcoded 8 — a sharded engine
+    must bucket for its actual topology."""
+    import types
+
+    from repro.serve.engine import _mesh_sort_p
+
+    assert _mesh_sort_p(None) == 8
+    assert _mesh_sort_p(types.SimpleNamespace(devices=np.zeros((2, 4)))) == 8
+    assert _mesh_sort_p(types.SimpleNamespace(devices=np.zeros((4, 4)))) == 16
+    assert _mesh_sort_p(types.SimpleNamespace(devices=np.zeros((6,)))) == 4
+    assert _mesh_sort_p(types.SimpleNamespace(devices=np.zeros((1,)))) == 1
+
+
+def test_admission_order_explicit_p_override_and_service_telemetry():
+    cfg = get_arch("tinyllama-1.1b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params, ServeConfig(max_new_tokens=2))
+    assert eng.sort_p == 8 and eng.sort_service.cfg.p == 8  # no mesh default
+    lens = np.random.default_rng(5).integers(1, 2048, 100).astype(np.int32)
+    order = eng.admission_order(lens, p=4)  # explicit override still works
+    assert sorted(order.tolist()) == list(range(100))
+    assert (np.diff(lens[order]) >= 0).all()
+    # the default path goes through the engine's sort service and its
+    # telemetry (latency per admission sort) accumulates
+    before = len(eng.sort_service.latencies)
+    eng.admission_order(lens)
+    assert len(eng.sort_service.latencies) == before + 1
+    assert sum(eng.capacity_stats.attempts.values()) >= 1

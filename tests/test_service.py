@@ -1,0 +1,330 @@
+"""Sort service: segmented fusion, batch forming, telemetry, bench JSON."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    SortConfig,
+    SortExecutor,
+    bsp_sort_safe,
+    datagen,
+    gathered_output,
+    pack_segments,
+    segmented_sort_safe,
+    sort_segments,
+)
+from repro.service import BatchFormer, ServiceConfig, SortService
+
+pytestmark = pytest.mark.fast
+
+
+def _per_request_reference(keys: np.ndarray, p: int = 8) -> np.ndarray:
+    """The pre-service dispatch: one whole overflow-safe BSP sort for this
+    single request (sentinel-padded to its own pow2 layout)."""
+    n = keys.shape[0]
+    n_p = max(8, 1 << (max(1, -(-n // p)) - 1).bit_length())
+    pad = p * n_p - n
+    x = np.concatenate([keys, np.full(pad, np.iinfo(np.int32).max, np.int32)])
+    res, _, _ = bsp_sort_safe(
+        jnp.asarray(x.reshape(p, n_p)), algorithm="iran", pair_capacity="whp"
+    )
+    return gathered_output(res)[:n]
+
+
+def test_segmented_matches_per_request_sort_byte_identical():
+    """Acceptance: the fused segmented sort returns byte-identical output to
+    per-request ``bsp_sort_safe`` on every packed segment — ragged sizes,
+    duplicate-heavy and zipf mixes included."""
+    sizes = datagen.zipf_sizes(24, 4096, seed=21)
+    mixes = ["U", "DD", "zipf", "WR"]
+    arrays = [
+        datagen.generate(mixes[i % len(mixes)], 1, int(s), seed=50 + i)[0]
+        for i, s in enumerate(sizes)
+    ]
+    res = sort_segments(arrays, p=8)
+    for i, (a, got) in enumerate(zip(arrays, res.keys)):
+        ref = _per_request_reference(a)
+        assert got.dtype == ref.dtype == np.int32
+        assert np.array_equal(got, ref), i
+
+
+def test_segmented_ragged_and_empty_segments():
+    rng = np.random.default_rng(0)
+    arrays = [
+        rng.integers(-(2**31), 2**31, s).astype(np.int32)
+        for s in [0, 1, 7, 333, 0, 64]
+    ]
+    res = sort_segments(arrays, p=8)
+    assert [len(k) for k in res.keys] == [0, 1, 7, 333, 0, 64]
+    for a, k, o in zip(arrays, res.keys, res.order):
+        assert np.array_equal(k, np.sort(a))
+        assert np.array_equal(a[o], k)  # order is the argsort
+
+
+def test_segmented_stable_order_on_duplicate_heavy_segments():
+    """§5.1.1 carried to segments: within a segment, equal keys keep their
+    original order (the ``order`` payload is the *stable* argsort)."""
+    arrays = [
+        np.zeros(257, np.int32),  # all keys equal
+        datagen.generate("DD", 1, 500, seed=2)[0],
+        datagen.generate("zipf", 1, 400, seed=3)[0],
+    ]
+    res = sort_segments(arrays, p=8)
+    for a, k, o in zip(arrays, res.keys, res.order):
+        assert np.array_equal(a[o], k)
+        for v in np.unique(k):
+            sel = o[k == v]
+            assert (np.diff(sel) > 0).all()  # stable within equal keys
+
+
+def test_segmented_adversarial_batch_escalates_not_truncates():
+    """Eight constant-key requests aim every packed run at one bucket — on a
+    whp-tier service the cheap tier faults and the per-batch ladder must
+    escalate, returning every key (vs plain np.sort per request)."""
+    arrays = [np.full(1024, r * 1000, np.int32) for r in range(8)]
+    svc = SortService(
+        ServiceConfig(p=8, pair_capacity="whp"), executor=SortExecutor()
+    )
+    results = svc.sort_many(arrays)
+    assert svc.stats.retries >= 1  # escalated past the cheap tier
+    for a, r in zip(arrays, results):
+        assert np.array_equal(r.keys, np.sort(a))
+        assert r.tier not in (None, "whp")
+
+
+def test_default_service_serves_multi_segment_batches_first_tier():
+    """Perf guard: the default config must serve a benign multi-segment
+    batch at its FIRST ladder rung with zero retries. (Contiguous segment
+    packing structurally violates the whp per-pair bound, which is why the
+    service starts at the exact tier — a default that always faults would
+    silently run every batch ~3×.)"""
+    rng = np.random.default_rng(7)
+    arrays = [rng.integers(0, 2**31, 512).astype(np.int32) for _ in range(16)]
+    svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
+    results = svc.sort_many(arrays)
+    assert svc.stats.retries == 0, svc.stats.as_row()
+    assert all(r.tier == svc.stats.last_tier for r in results)
+    for a, r in zip(arrays, results):
+        assert np.array_equal(r.keys, np.sort(a))
+
+
+def test_flush_keeps_piggybacked_results_claimable():
+    """A request fused into another caller's flush must stay claimable:
+    sort_one drains the queue but only claims its OWN result."""
+    svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
+    a = np.arange(100, dtype=np.int32)[::-1].copy()
+    rid_a = svc.submit(a)
+    b = np.arange(50, dtype=np.int32)[::-1].copy()
+    res_b = svc.sort_one(b)  # fuses a into the same flush
+    assert np.array_equal(res_b.keys, np.sort(b))
+    assert svc.pending == 0
+    later = svc.flush()  # nothing queued, but a's result is still unclaimed
+    assert set(later) == {rid_a}
+    res_a = svc.take_result(rid_a)
+    assert np.array_equal(res_a.keys, np.sort(a))
+    assert svc.flush() == {}  # claimed: the store is empty
+    # take_result flushes a still-pending rid on demand
+    rid_c = svc.submit(a)
+    assert np.array_equal(svc.take_result(rid_c).keys, np.sort(a))
+
+
+def test_batch_former_pow2_buckets_and_key_cap():
+    former = BatchFormer(p=8, max_batch_keys=1000, min_n_per_proc=8)
+    reqs = [(i, np.zeros(s, np.int32)) for i, s in enumerate([600, 300, 200, 5000])]
+    batches = former.form(reqs)
+    # 600+300 fit; 200 opens a new batch; 5000 exceeds the cap alone but
+    # still gets its own (bigger-bucket) batch
+    assert [b.rids for b in batches] == [[0, 1], [2], [3]]
+    assert [b.total_keys for b in batches] == [900, 200, 5000]
+    for b in batches:
+        n_p = b.n_per_proc
+        assert n_p & (n_p - 1) == 0 and 8 * n_p >= b.total_keys
+    assert batches[0].n_per_proc == 128  # ceil(900/8)=113 -> pow2 128
+    assert former.form([]) == []
+
+
+def test_batch_former_reuses_one_compiled_sort_per_bucket():
+    """CI regression: two different same-bucket request mixes must reuse ONE
+    compiled segmented sort (zero new executor traces on the second flush).
+    det + exact capacity keeps the visited-tier set deterministic."""
+    ex = SortExecutor()
+    cfg = ServiceConfig(p=8, algorithm="det", pair_capacity="exact")
+    rng = np.random.default_rng(4)
+
+    def mix(sizes):
+        return [rng.integers(0, 2**31, s).astype(np.int32) for s in sizes]
+
+    SortService(cfg, executor=ex).sort_many(mix([900, 60, 40]))  # total 1000
+    first = dict(ex.trace_counts)
+    assert first and all(v == 1 for v in first.values())
+    assert sum(1 for k in first if k[0] == "prepare") == 1
+    SortService(cfg, executor=ex).sort_many(mix([500, 10, 400, 101]))  # 1011
+    assert dict(ex.trace_counts) == first  # same pow2 bucket: no new traces
+    # a different bucket compiles separately (and only once)
+    SortService(cfg, executor=ex).sort_many(mix([5000]))
+    grew = dict(ex.trace_counts)
+    assert len(grew) > len(first) and all(v == 1 for v in grew.values())
+
+
+def test_service_telemetry_latency_and_tier_stats():
+    svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
+    arrays = [np.arange(s, dtype=np.int32)[::-1].copy() for s in [10, 200, 3000]]
+    results = svc.sort_many(arrays)
+    assert len(svc.latencies) == 3
+    assert all(r.latency_s > 0 for r in results)
+    assert all(r.n_per_proc == results[0].n_per_proc for r in results)
+    assert svc.keys_sorted == 3210 and svc.batches_dispatched == 1
+    tele = svc.telemetry()
+    assert tele["requests"] == 3 and tele["batches"] == 1
+    assert sum(svc.stats.attempts.values()) >= 1
+    # flush with nothing pending is a no-op
+    assert svc.flush() == {} and svc.pending == 0
+
+
+def test_service_max_batch_splits_into_multiple_fused_sorts():
+    svc = SortService(
+        ServiceConfig(p=8, max_batch_keys=650), executor=SortExecutor()
+    )
+    arrays = [np.arange(300, dtype=np.int32)[::-1].copy() for _ in range(4)]
+    results = svc.sort_many(arrays)
+    assert svc.batches_dispatched == 2  # 300+300 fits under 650 -> 2+2
+    for a, r in zip(arrays, results):
+        assert np.array_equal(r.keys, np.sort(a))
+
+
+def test_pack_segments_layout_and_bounds():
+    packed = pack_segments(
+        [np.arange(3, dtype=np.int32), np.arange(2, dtype=np.int32)],
+        p=4,
+        n_per_proc=8,
+    )
+    assert packed.comp.shape == (4, 8) and packed.comp.dtype == np.int64
+    assert packed.pos.shape == (4, 8) and packed.n_keys == 5
+    real_mask = packed.pos >= 0
+    # pads carry the past-the-last segment id: strictly above real keys
+    assert packed.comp[~real_mask].min() > packed.comp[real_mask].max()
+    # real keys are spread evenly across lanes (no all-pad lane: a constant
+    # run aimed at one bucket would structurally fault the whp pair tier),
+    # and each lane's real share is a prefix (stability reads submit order)
+    per_lane = real_mask.sum(axis=1)
+    assert per_lane.max() - per_lane.min() <= 1
+    for k in range(4):
+        assert real_mask[k, : per_lane[k]].all()
+    # single-segment hot path: no composite lift, raw int32 keys
+    one = pack_segments([np.arange(5, dtype=np.int32)], p=4, n_per_proc=8)
+    assert one.comp.dtype == np.int32
+    assert (one.comp[one.pos < 0] == np.iinfo(np.int32).max).all()
+    with pytest.raises(ValueError):
+        pack_segments([np.zeros(100, np.int32)], p=2, n_per_proc=8)
+
+
+def test_single_segment_int32_path_handles_max_key_collisions():
+    """Single-segment pads equal int32 max, which legal keys may also hold:
+    the unpack must keep every real key (filtering by payload, not value)
+    and stay stable among the collided maxima."""
+    imax = np.iinfo(np.int32).max
+    keys = np.concatenate(
+        [np.full(7, imax, np.int32), np.arange(50, dtype=np.int32)]
+    )
+    res = sort_segments([keys], p=8)
+    assert np.array_equal(res.keys[0], np.sort(keys))
+    assert np.array_equal(keys[res.order[0]], res.keys[0])
+    sel = res.order[0][res.keys[0] == imax]
+    assert (np.diff(sel) > 0).all()  # stable within the collided maxima
+
+
+def test_single_segment_batch_serves_on_cheap_whp_tier():
+    """The auto tier keeps the old cheap regime for single-segment sorts
+    (serve admission / data bucketing): a benign corpus must be served by
+    the whp rung, not forced onto exact's p×-larger routing buffers."""
+    lens = np.random.default_rng(11).integers(1, 5000, 999).astype(np.int32)
+    svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
+    res = svc.sort_one(lens)
+    assert np.array_equal(res.keys, np.sort(lens))
+    assert res.tier == "whp" and svc.stats.retries == 0, svc.stats.as_row()
+
+
+def test_flush_requeues_admitted_requests_on_batch_failure(monkeypatch):
+    """An admitted request may never be dropped: if a batch's sort raises,
+    everything not yet completed must return to the queue and a later
+    flush must still deliver it."""
+    import repro.service.service as svc_mod
+
+    svc = SortService(
+        ServiceConfig(p=8, max_batch_keys=100), executor=SortExecutor()
+    )
+    rid_a = svc.submit(np.arange(80, dtype=np.int32)[::-1].copy())
+    rid_b = svc.submit(np.arange(90, dtype=np.int32)[::-1].copy())
+    calls = {"n": 0}
+    orig = svc_mod.segmented_sort_safe
+
+    def failing(*args, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("boom")
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(svc_mod, "segmented_sort_safe", failing)
+    with pytest.raises(RuntimeError):
+        svc.flush()  # batch 1 (rid_a) completes, batch 2 (rid_b) raises
+    assert svc.pending == 1  # rid_b is back in the queue, not lost
+    monkeypatch.setattr(svc_mod, "segmented_sort_safe", orig)
+    out = svc.flush()
+    assert set(out) == {rid_a, rid_b}  # earlier completion + the retry
+    assert np.array_equal(
+        svc.take_result(rid_b).keys, np.arange(90, dtype=np.int32)
+    )
+
+
+def test_length_bucketed_order_rejects_mismatched_service_p():
+    from repro.data import length_bucketed_order
+    from repro.service import ServiceConfig as SC, SortService as SS
+
+    svc = SS(SC(p=8), executor=SortExecutor())
+    lens = np.arange(100, dtype=np.int32)
+    with pytest.raises(ValueError):
+        length_bucketed_order(lens, p=16, service=svc)
+    order = length_bucketed_order(lens, p=8, service=svc)
+    assert np.array_equal(order, np.arange(100))
+
+
+def test_datagen_zipf_keys_and_sizes():
+    z = datagen.generate("zipf", 4, 500, seed=3)
+    assert z.shape == (4, 500) and z.dtype == np.int32 and z.min() >= 1
+    _, counts = np.unique(z, return_counts=True)
+    assert counts.max() / z.size > 0.2  # duplicate-heavy head
+    assert np.array_equal(z, datagen.generate("zipf", 4, 500, seed=3))
+    s = datagen.zipf_sizes(32, 4096, seed=21)
+    assert s.sum() == 4096 and s.min() >= 1 and len(s) == 32
+    assert np.array_equal(s, datagen.zipf_sizes(32, 4096, seed=21))
+    assert s.max() / s.min() > 8  # genuinely skewed mix
+    # degenerate totals must still satisfy the contract (sum, min >= 1)
+    for total in (64, 65, 80):
+        t = datagen.zipf_sizes(64, total, seed=0)
+        assert t.sum() == total and t.min() >= 1
+
+
+def test_bench_json_writer(tmp_path):
+    import json
+
+    from benchmarks import common
+
+    saved = list(common.ROWS)
+    del common.ROWS[:]
+    try:
+        common.emit("service", {"mix": "U", "speedup": 2.5})
+        common.emit("service", {"mix": "DD", "speedup": 2.8})
+        common.emit("capacity", {"variant": "RSQ", "complete": True})
+        paths = common.write_json(str(tmp_path))
+        assert [p.split("/")[-1] for p in paths] == [
+            "BENCH_capacity.json",
+            "BENCH_service.json",
+        ]
+        data = json.load(open(paths[1]))
+        assert data["table"] == "service"
+        assert data["rows"] == [
+            {"mix": "U", "speedup": 2.5},
+            {"mix": "DD", "speedup": 2.8},
+        ]
+    finally:
+        common.ROWS[:] = saved

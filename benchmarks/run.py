@@ -73,6 +73,8 @@ def main() -> None:
        p=16 if not args.full else 64)
     go("service", tables.table_service, n_requests=64,
        total=M // 16 if not args.full else M, p=8 if not args.full else 16)
+    go("planner", tables.table_planner, n_requests=64,
+       total=M // 16 if not args.full else M, p=8 if not args.full else 16)
 
     if args.json:
         for path in write_json(args.json):

@@ -255,6 +255,25 @@ def table_capacity_retry(n, p=16, variants=("RSQ", "RSR", "DSQ")):
             )
 
 
+def _timed_service(svc_cfg, ex, arrays, repeats):
+    """Warm (compile) one service, then time fresh services over the burst.
+
+    Shared by the ``service`` and ``planner`` tables so both measure under
+    the identical warm-then-measure protocol. Returns (mean wall seconds,
+    the last timed service — for its telemetry counters).
+    """
+    from repro.service import SortService
+
+    SortService(svc_cfg, executor=ex).sort_many(arrays)  # warm/compile
+    ts, svc = [], None
+    for _ in range(repeats):
+        svc = SortService(svc_cfg, executor=ex)
+        t0 = time.time()
+        svc.sort_many(arrays)
+        ts.append(time.time() - t0)
+    return float(np.mean(ts)), svc
+
+
 def table_service(n_requests=64, total=1 << 16, p=8, mixes=("U", "G", "B", "DD", "zipf")):
     """Sort-service dispatch: fused segmented sort vs per-request sorts.
 
@@ -272,7 +291,7 @@ def table_service(n_requests=64, total=1 << 16, p=8, mixes=("U", "G", "B", "DD",
     not compile amortization.
     """
     from repro.core.api import SortExecutor
-    from repro.service import ServiceConfig, SortService
+    from repro.service import ServiceConfig
     from benchmarks.common import REPEATS
 
     sizes = datagen.zipf_sizes(n_requests, total, seed=21)
@@ -281,25 +300,16 @@ def table_service(n_requests=64, total=1 << 16, p=8, mixes=("U", "G", "B", "DD",
             datagen.generate(mix, 1, int(s), seed=100 + i)[0]
             for i, s in enumerate(sizes)
         ]
-
-        def timed(svc_cfg, ex):
-            SortService(svc_cfg, executor=ex).sort_many(arrays)  # warm/compile
-            ts, svc = [], None
-            for _ in range(REPEATS):
-                svc = SortService(svc_cfg, executor=ex)
-                t0 = time.time()
-                svc.sort_many(arrays)
-                ts.append(time.time() - t0)
-            return float(np.mean(ts)), svc, ex
-
         ex_f = SortExecutor()
-        t_fused, svc_f, _ = timed(
-            ServiceConfig(p=p, max_batch_keys=2 * total), ex_f
+        t_fused, svc_f = _timed_service(
+            ServiceConfig(p=p, max_batch_keys=2 * total), ex_f, arrays, REPEATS
         )
         ex_r = SortExecutor()
-        t_per, svc_r, _ = timed(ServiceConfig(p=p, max_batch_keys=1), ex_r)
+        t_per, svc_r = _timed_service(
+            ServiceConfig(p=p, max_batch_keys=1), ex_r, arrays, REPEATS
+        )
         buckets = lambda ex: len({k[2].n_per_proc for k in ex.trace_counts})
-        lat = np.asarray(svc_f.latencies[-n_requests:], np.float64)
+        lat = np.fromiter(svc_f.latencies, np.float64)[-n_requests:]
         emit(
             "service",
             {
@@ -316,6 +326,62 @@ def table_service(n_requests=64, total=1 << 16, p=8, mixes=("U", "G", "B", "DD",
                 "lat_p99_ms": round(float(np.quantile(lat, 0.99)) * 1e3, 2),
                 "retries_fused": svc_f.stats.retries,
                 "retries_per_req": svc_r.stats.retries,
+            },
+        )
+
+
+def table_planner(n_requests=64, total=1 << 16, p=8, mixes=("U", "G", "B", "DD", "zipf")):
+    """Capacity planner vs the PR 3 tier rule on fused multi-segment batches.
+
+    One Zipf-size mix of ``n_requests`` concurrent requests per key mix,
+    fused into a single batch. ``rule`` is the PR 3 dispatch (contiguous
+    packing, every multi-segment batch pinned to the ``exact`` pair
+    capacity); ``planner`` is the adaptive path (striped packing, the
+    segment-aware whp bound picking a sub-exact ``planned`` starting tier,
+    traffic-learned rungs). Both warmed, so ``speedup`` is routing-volume
+    work, not compile amortization. ``planned_cap``/``exact_cap`` show the
+    per-(src,dst) capacity each path routed with; ``start_tier`` must be
+    sub-exact with zero retries for the planner to be a win (a plan that
+    faults pays the wasted attempt — visible in ``retries_planner``).
+    """
+    from repro.core.api import SortExecutor
+    from repro.service import ServiceConfig
+    from repro.planner import fingerprint_arrays, planned_cap_for
+    from benchmarks.common import REPEATS
+
+    sizes = datagen.zipf_sizes(n_requests, total, seed=21)
+    for mix in mixes:
+        arrays = [
+            datagen.generate(mix, 1, int(s), seed=100 + i)[0]
+            for i, s in enumerate(sizes)
+        ]
+        cap_keys = 2 * total  # one fused batch per flush
+        ex_r = SortExecutor()
+        t_rule, svc_r = _timed_service(
+            ServiceConfig(p=p, pair_capacity="exact", max_batch_keys=cap_keys),
+            ex_r, arrays, REPEATS,
+        )
+        ex_p = SortExecutor()
+        t_plan, svc_p = _timed_service(
+            ServiceConfig(p=p, max_batch_keys=cap_keys), ex_p, arrays, REPEATS
+        )
+        fp = fingerprint_arrays(arrays, p)
+        omega, cap = planned_cap_for(fp)
+        emit(
+            "planner",
+            {
+                "mix": mix, "n_req": n_requests, "keys": total, "p": p,
+                "wall_rule_s": round(t_rule, 4),
+                "wall_planner_s": round(t_plan, 4),
+                "speedup": round(t_rule / max(t_plan, 1e-9), 2),
+                "start_tier": max(svc_p.start_tiers, key=svc_p.start_tiers.get),
+                "planned_cap": cap,
+                "exact_cap": fp.n_per_proc,
+                "omega": round(omega, 2),
+                "dup_frac": round(fp.dup_fraction, 3),
+                "lane_spread_max": fp.lane_spread_max,
+                "retries_planner": svc_p.stats.retries,
+                "retries_rule": svc_r.stats.retries,
             },
         )
 

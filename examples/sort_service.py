@@ -41,10 +41,23 @@ print(
 )
 print(f"[telemetry] {service.telemetry()}")
 
+# the capacity planner resolved each fused batch's starting tier from its
+# fingerprint: multi-segment batches pack STRIPED and start at the
+# segment-aware sub-exact "planned" capacity (PR 3 pinned them to exact)
+from repro.planner import fingerprint_arrays, planned_cap_for
+
+fp = fingerprint_arrays(requests, 8)
+omega, cap = planned_cap_for(fp)
+print(
+    f"[planner] start tiers {service.start_tiers}; one-batch bound: "
+    f"pair_cap {cap} vs exact {fp.n_per_proc} (omega {omega:.1f}, "
+    f"dup {fp.dup_fraction:.2f}, lane spread ≤{fp.lane_spread_max})"
+)
+
 # an adversarial batch (every request one constant key value) escalates its
 # OWN batch through the capacity ladder; nothing is ever dropped. (Shown on
-# a whp-tier service — the default starts at exact, where per-pair overflow
-# is impossible by construction.)
+# a whp-pinned service — the planner-backed default prices such batches at
+# exact up front, where per-pair overflow is impossible by construction.)
 whp_service = SortService(
     ServiceConfig(p=8, pair_capacity="whp"), executor=service.executor
 )

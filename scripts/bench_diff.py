@@ -1,0 +1,149 @@
+"""Compare a fresh ``BENCH_<table>.json`` against a committed baseline.
+
+    PYTHONPATH=src python scripts/bench_diff.py BASELINE.json FRESH.json \
+        [--tol 0.3] [--list]
+
+The ``--json OUT`` trajectory files (benchmarks/common.write_json) hold
+seeded-input rows in deterministic emit order, so two runs of the same
+commit differ only in their metric fields. This tool makes that trajectory
+*enforceable*: rows are matched positionally, identity fields (shapes,
+variants, tier names, counters' non-metric context) must match exactly,
+and metric fields are compared under a relative tolerance —
+
+* lower-is-better: wall/latency seconds (``wall*``, ``*_s``, ``lat_*``),
+  retry counters (``retries*``, ``retry_cost``);
+* higher-is-better: ``speedup``, ``*keys_per_s``, ``work_eff*``.
+
+A metric worse than baseline by more than ``--tol`` (default 30% — CI
+timing noise on a shared core is real) is a **regression**: nonzero exit,
+one line per offender. Improvements are reported, never fatal. Structural
+drift (row count, identity mismatch, new/missing tables) exits 2 so a
+reshaped benchmark fails loudly instead of silently passing.
+
+Exit codes: 0 clean · 1 regression · 2 structural mismatch / bad input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+#: metric-name fragments, direction: +1 = higher is better, -1 = lower
+_HIGHER = ("speedup", "keys_per_s", "work_eff")
+_LOWER = ("wall", "lat_", "retry", "retries")
+
+
+def metric_direction(name: str):
+    """+1 / -1 for metric fields, None for identity fields.
+
+    The seconds suffix is matched with ``endswith`` only — a substring test
+    would swallow identity fields that merely contain ``_s`` (e.g. the
+    planner table's ``lane_spread_max``) and let structural drift pass as a
+    metric "improvement".
+    """
+    for frag in _HIGHER:
+        if frag in name:
+            return 1
+    for frag in _LOWER:
+        if frag in name:
+            return -1
+    if name.endswith("_s"):
+        return -1
+    return None
+
+
+def load_rows(path: str) -> Tuple[str, List[Dict]]:
+    with open(path) as f:
+        data = json.load(f)
+    if "table" not in data or "rows" not in data:
+        raise ValueError(f"{path}: not a BENCH_<table>.json file")
+    return data["table"], data["rows"]
+
+
+def diff_rows(
+    base: Dict, fresh: Dict, tol: float, where: str
+) -> Tuple[List[str], List[str]]:
+    """(regressions, notes) comparing one matched row pair."""
+    regressions, notes = [], []
+    for key in sorted(set(base) | set(fresh)):
+        if key not in base or key not in fresh:
+            regressions.append(f"{where}: field {key!r} only in one side")
+            continue
+        b, f = base[key], fresh[key]
+        d = metric_direction(key)
+        numeric = isinstance(b, (int, float)) and isinstance(f, (int, float))
+        if d is None or not numeric:
+            if b != f:
+                regressions.append(
+                    f"{where}: identity field {key}={f!r} (baseline {b!r})"
+                )
+            continue
+        if b == f:
+            continue
+        # relative change, signed so positive = better
+        ref = max(abs(float(b)), 1e-12)
+        change = d * (float(f) - float(b)) / ref
+        if change < -tol:
+            regressions.append(
+                f"{where}: {key} {b} -> {f} ({change * 100:+.1f}% vs tol "
+                f"{tol * 100:.0f}%)"
+            )
+        elif change > tol:
+            notes.append(f"{where}: {key} {b} -> {f} ({change * 100:+.1f}%)")
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_<table>.json")
+    ap.add_argument("fresh", help="freshly produced BENCH_<table>.json")
+    ap.add_argument(
+        "--tol", type=float, default=0.3,
+        help="relative regression tolerance on metric fields (default 0.3)",
+    )
+    ap.add_argument(
+        "--list", action="store_true",
+        help="also print rows that stayed within tolerance",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        btab, brows = load_rows(args.baseline)
+        ftab, frows = load_rows(args.fresh)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"bench_diff: {e}", file=sys.stderr)
+        return 2
+    if btab != ftab:
+        print(f"bench_diff: table mismatch {btab!r} vs {ftab!r}", file=sys.stderr)
+        return 2
+    if len(brows) != len(frows):
+        print(
+            f"bench_diff: {btab}: row count {len(frows)} vs baseline "
+            f"{len(brows)}",
+            file=sys.stderr,
+        )
+        return 2
+
+    regressions: List[str] = []
+    notes: List[str] = []
+    for i, (b, f) in enumerate(zip(brows, frows)):
+        r, n = diff_rows(b, f, args.tol, f"{btab}[{i}]")
+        regressions += r
+        notes += n
+        if args.list and not r:
+            print(f"ok   {btab}[{i}]")
+    for line in notes:
+        print(f"note {line}")
+    for line in regressions:
+        print(f"REGR {line}")
+    identity_regr = any("identity field" in r or "only in one" in r for r in regressions)
+    if regressions:
+        print(f"bench_diff: {len(regressions)} regression(s) in {btab}")
+        return 2 if identity_regr else 1
+    print(f"bench_diff: {btab}: {len(brows)} rows within {args.tol * 100:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

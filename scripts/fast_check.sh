@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Quick verification loop (~40 s): the fast-marked tier-1 subset plus a
+# one-batch capacity-planner smoke (fingerprint → segment-aware bound →
+# planned-tier fused sort → persisted history round-trip), so the planner
+# subsystem is exercised end-to-end even in the quick loop.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -m fast -q
+
+python - <<'EOF'
+import os, tempfile
+import numpy as np
+from repro.core import datagen
+from repro.planner import CapacityPlanner, bucket_key, fingerprint_arrays
+from repro.service import ServiceConfig, SortService
+from repro.core.api import SortExecutor
+
+with tempfile.TemporaryDirectory() as d:
+    path = os.path.join(d, "planner.json")
+    arrays = [datagen.generate("U", 1, int(s), seed=i)[0]
+              for i, s in enumerate(datagen.zipf_sizes(16, 4096, seed=0))]
+    svc = SortService(ServiceConfig(p=8, planner_path=path),
+                      executor=SortExecutor())
+    results = svc.sort_many(arrays)
+    assert all(np.array_equal(r.keys, np.sort(a))
+               for a, r in zip(arrays, results)), "fused sort mismatch"
+    assert results[0].tier == "planned", results[0].tier
+    assert svc.stats.retries == 0, svc.stats.as_row()
+
+    fp = fingerprint_arrays(arrays, 8)
+    reloaded = CapacityPlanner(path=path)  # history round-trip
+    assert bucket_key(fp) in reloaded.history, reloaded.history
+    print("planner smoke: planned-tier fused sort + history round-trip OK")
+EOF

@@ -65,7 +65,13 @@ big array:
 * **escalation per batch** (``service/service.py``) — each fused batch
   runs through :func:`bsp_sort_safe`'s capacity ladder independently, so
   an adversarial request escalates only its own batch, and per-request
-  latency plus :class:`TierStats` counters surface as service telemetry.
+  latency plus :class:`TierStats` counters surface as service telemetry;
+* **capacity planning** (``repro.planner``) — the batch's starting tier
+  and oversampling ratio come from a workload fingerprint + the
+  segment-aware whp bound (``pair_capacity="planned"`` over the striped
+  packing layout), adapted per fingerprint bucket by observed fault
+  rates. The same planner object optionally drives :func:`bsp_sort_safe`
+  and ``moe_ep_safe`` ladder starts (``planner=``).
 
 Serve admission ordering (``serve/engine.py``) and data-pipeline length
 bucketing (``data/pipeline.py``) are service consumers.
@@ -213,6 +219,21 @@ class TierStats:
             self.last_tier = tier
         else:
             self.retries += 1
+
+    def merge_from(self, other: "TierStats") -> None:
+        """Fold another instance's counters in (per-batch → accumulator).
+
+        Lets a caller observe one dispatch in isolation (e.g. the capacity
+        planner's fault feedback) while still accumulating service-wide
+        telemetry in a shared instance.
+        """
+        for t, n in other.attempts.items():
+            self.attempts[t] = self.attempts.get(t, 0) + n
+        for t, n in other.successes.items():
+            self.successes[t] = self.successes.get(t, 0) + n
+        self.retries += other.retries
+        if other.last_tier is not None:
+            self.last_tier = other.last_tier
 
     def as_row(self) -> Dict[str, int]:
         """Flat counter row: attempts, clean-run counts, total retries.
@@ -452,14 +473,15 @@ def default_executor() -> SortExecutor:
 
 
 def _escalate(
-    cfg: SortConfig, rng: jax.Array, stats: Optional[TierStats], run_tier: Callable
+    ladder: tuple, rng: jax.Array, stats: Optional[TierStats], run_tier: Callable
 ) -> Tuple[SortResult, List[jnp.ndarray], TierStats]:
     """Shared escalation loop: run each ladder rung until the overflow flag
     is clean. The rng is folded per tier so a randomized retry is an
     independent trial (re-drawing the failed splitter sample would correlate
-    failures). ``run_tier(tier_cfg, tier_rng) -> (SortResult, value_bufs)``."""
+    failures). ``run_tier(tier_cfg, tier_rng) -> (SortResult, value_bufs)``.
+    ``ladder`` is (a suffix of) ``SortConfig.tier_ladder()`` — a planner
+    policy may have sliced the doomed cheap rungs off the front."""
     stats = stats if stats is not None else TierStats()
-    ladder = cfg.tier_ladder()
     for i, (tier, tier_cfg) in enumerate(ladder):
         res, vbufs = run_tier(tier_cfg, jax.random.fold_in(rng, i))
         ok = not bool(res.overflow)  # host sync: the retry decision point
@@ -481,6 +503,7 @@ def bsp_sort_safe(
     stats: Optional[TierStats] = None,
     executor: Optional[SortExecutor] = None,
     resume: bool = True,
+    planner=None,
     **overrides,
 ) -> Tuple[SortResult, List[jnp.ndarray], TierStats]:
     """Overflow-safe :func:`bsp_sort`: escalate through the capacity ladder.
@@ -492,6 +515,12 @@ def bsp_sort_safe(
     to re-running the whole sort per rung (the pre-pipeline behaviour, kept
     for the ``retry_cost`` benchmark comparison). Returns
     ``(result, value_bufs, stats)``.
+
+    ``planner`` (a :class:`repro.planner.CapacityPlanner`) is an optional
+    traffic-learned policy: repeated sorts of the same shape/config that
+    keep faulting their cheap rung start one rung up next time (and probe
+    back down after a clean streak) — the ladder above the learned start is
+    unchanged, so safety is untouched.
     """
     p, n_p = x.shape
     if cfg is None:
@@ -500,6 +529,16 @@ def bsp_sort_safe(
         rng = jax.random.key(cfg.seed)
     ex = executor if executor is not None else _EXECUTOR
     nv = len(values)
+
+    ladder = cfg.tier_ladder()
+    bucket = None
+    if planner is not None and len(ladder) > 1:
+        bucket = (
+            f"sort/{cfg.algorithm}/p{p}/npp{n_p}/{cfg.pair_capacity}"
+        )
+        ladder = ladder[planner.rung_for(bucket, len(ladder)) :]
+    stats = stats if stats is not None else TierStats()
+    retries_before = stats.retries
 
     if not resume:
 
@@ -512,16 +551,21 @@ def bsp_sort_safe(
                 vbufs
             )
 
-        return _escalate(cfg, rng, stats, run_tier)
+    else:
+        # Ph2 (+ det Ph3), exactly once
+        prep = ex.prepare_vmap(cfg, nv)(x, *values)
 
-    prep = ex.prepare_vmap(cfg, nv)(x, *values)  # Ph2 (+ det Ph3), exactly once
+        def run_tier(tier_cfg, tier_rng):
+            fn = ex.route_vmap(tier_cfg, nv)
+            buf, vbufs, count, overflow = fn(prep, jax.random.key_data(tier_rng))
+            return SortResult(buf=buf, count=count, overflow=overflow.any()), list(
+                vbufs
+            )
 
-    def run_tier(tier_cfg, tier_rng):
-        fn = ex.route_vmap(tier_cfg, nv)
-        buf, vbufs, count, overflow = fn(prep, jax.random.key_data(tier_rng))
-        return SortResult(buf=buf, count=count, overflow=overflow.any()), list(vbufs)
-
-    return _escalate(cfg, rng, stats, run_tier)
+    out = _escalate(ladder, rng, stats, run_tier)
+    if bucket is not None:
+        planner.observe(bucket, stats.retries > retries_before, len(cfg.tier_ladder()))
+    return out
 
 
 def bsp_sort_sharded_safe(
@@ -560,7 +604,7 @@ def bsp_sort_sharded_safe(
                 vbufs
             )
 
-        return _escalate(cfg, rng, stats, run_tier)
+        return _escalate(cfg.tier_ladder(), rng, stats, run_tier)
 
     prep = ex.prepare_sharded(cfg, mesh, mesh_axis, nv)(x, *values)
 
@@ -569,7 +613,7 @@ def bsp_sort_sharded_safe(
         buf, vbufs, count, overflow = fn(prep, jax.random.key_data(tier_rng))
         return SortResult(buf=buf, count=count, overflow=overflow.any()), list(vbufs)
 
-    return _escalate(cfg, rng, stats, run_tier)
+    return _escalate(cfg.tier_ladder(), rng, stats, run_tier)
 
 
 def gathered_output(result: SortResult) -> np.ndarray:

@@ -26,15 +26,32 @@ prepare/route phase pipeline, the capacity-tier escalation ladder
 cache — one compiled program per ``(p, n_per_proc)`` shape serves every
 batch that packs to that shape.
 
-Layout: ``pack_segments`` concatenates the ragged requests in submit order,
-pads the tail up to ``p * n_per_proc`` with composites of the
-past-the-last segment id (they sort after every real key), and deals the
-result row-major onto the ``(p, n_per_proc)`` global layout. A per-key
-``pos`` payload (the key's index *within its segment*) rides along, so the
-unpacked result carries each segment's stable argsort for free — packing
-preserves submit order and the whole pipeline is stable by
-(source proc, local index), hence equal keys keep their original
-within-segment order.
+Layout: ``pack_segments`` supports two lane layouts.
+
+* ``contiguous`` (the PR 3 default) concatenates the ragged requests in
+  submit order, pads the tail up to ``p * n_per_proc`` with composites of
+  the past-the-last segment id (they sort after every real key), and deals
+  the result row-major onto the ``(p, n_per_proc)`` global layout. Simple,
+  but every lane's run is *value-clustered* (it spans only a couple of
+  segments and routes almost whole to the destination covering its own
+  global position range), which structurally violates any sub-exact
+  per-pair routing capacity.
+* ``striped`` splits EVERY segment into ``p`` consecutive chunks, chunk k
+  appended to lane k (remainder +1s rotated across lanes so lane totals
+  differ by at most one). Each lane then holds ~1/p of every segment — a
+  value-representative sample of the whole batch — so per-(src,dst)
+  routing loads concentrate near ``n/p²`` again and the planner's
+  segment-aware w.h.p. pair capacity (``repro.planner.capacity``) applies.
+  Stability is preserved: within a segment, chunk k's submit positions all
+  precede chunk k+1's, so the pipeline's (source proc, local index) order
+  for equal composites is still ascending submit order. Pads get *distinct*
+  composites ``(R << 32) | (j·p + k)`` (lane k's j-th pad) interleaving the
+  lanes in sorted order, so the pad tail routes evenly instead of aiming
+  each lane's constant pad run at one bucket.
+
+A per-key ``pos`` payload (the key's index *within its segment*) rides
+along, so the unpacked result carries each segment's stable argsort for
+free — both layouts keep equal keys in original within-segment order.
 
 Keys are int32 (the library's key dtype throughout datagen/benchmarks);
 segment count is bounded by 2^31 so the composite stays inside int64.
@@ -107,10 +124,46 @@ class PackedSegments:
     sizes: Tuple[int, ...]  # true per-segment lengths, submit order
     p: int
     n_per_proc: int
+    layout: str = "contiguous"  # lane layout this batch was packed with
 
     @property
     def n_keys(self) -> int:
         return int(sum(self.sizes))
+
+
+def contiguous_lane_sizes(total: int, p: int) -> np.ndarray:
+    """(p,) real-key counts of the contiguous even-share lane deal.
+
+    The single source of truth for the contiguous packing geometry — used
+    by :func:`pack_segments` to fill lanes and by the planner's
+    fingerprint (``repro.planner.fingerprint.lane_spread``) to reason
+    about which segments each lane would span.
+    """
+    q, rem = divmod(int(total), p)
+    out = np.full(p, q, np.int64)
+    out[:rem] += 1
+    return out
+
+
+def striped_chunk_sizes(sizes: Sequence[int], p: int) -> np.ndarray:
+    """(R, p) per-lane chunk lengths for the striped layout.
+
+    Segment s contributes ``floor(m_s/p)`` keys to every lane plus a +1 to
+    ``m_s mod p`` lanes; the +1 windows are rotated (laid head-to-tail
+    around the lane circle) so final lane totals differ by at most one —
+    which is what keeps the packed batch inside ``n_p = ceil(total/p)``.
+    Deterministic, so the capacity planner can bound per-lane loads from
+    the sizes alone.
+    """
+    out = np.zeros((len(sizes), p), np.int64)
+    start = 0
+    for i, m in enumerate(sizes):
+        q, r = divmod(int(m), p)
+        out[i, :] = q
+        if r:
+            out[i, (start + np.arange(r)) % p] += 1
+            start += r
+    return out
 
 
 def pack_segments(
@@ -119,6 +172,7 @@ def pack_segments(
     *,
     n_per_proc: Optional[int] = None,
     min_n_per_proc: int = 8,
+    layout: str = "contiguous",
 ) -> PackedSegments:
     """Pack ragged int32 request arrays into one tagged (p, n_p) sort input.
 
@@ -126,13 +180,24 @@ def pack_segments(
     (see :func:`_pow2_n_per_proc`); passing it explicitly lets a batch
     former pin the bucket. Pads carry segment id ``len(arrays)`` — strictly
     above every real composite — so they sort to the global tail and the
-    valid prefix decodes exactly. Each lane gets an *even share* of the
-    real keys (submit-contiguous, so stability still reads in submit
-    order) with its own tail pads, rather than all pads piling onto the
-    last lanes: an all-pad lane is a constant run aimed at one routing
-    bucket, which would structurally fault the whp pair capacity even for
-    a single benign segment.
+    valid prefix decodes exactly.
+
+    ``layout="contiguous"`` deals the submit-order concatenation row-major:
+    each lane gets an *even share* of the real keys (submit-contiguous, so
+    stability still reads in submit order) with its own tail pads, rather
+    than all pads piling onto the last lanes: an all-pad lane is a constant
+    run aimed at one routing bucket, which would structurally fault the whp
+    pair capacity even for a single benign segment.
+
+    ``layout="striped"`` splits every segment into ``p`` consecutive chunks
+    (chunk k → lane k, remainders rotated; :func:`striped_chunk_sizes`), so
+    each lane holds a value-representative ~1/p of every segment and the
+    planner's segment-aware sub-exact pair capacity applies. Single-segment
+    batches ignore the distinction: the contiguous even-share deal IS the
+    one-segment stripe, and they keep the raw-int32 fast path.
     """
+    if layout not in ("contiguous", "striped"):
+        raise ValueError(f"unknown layout {layout!r}")
     arrays = [np.asarray(a, np.int32).reshape(-1) for a in arrays]
     sizes = tuple(int(a.shape[0]) for a in arrays)
     total = sum(sizes)
@@ -146,7 +211,8 @@ def pack_segments(
         [np.arange(s, dtype=np.int32) for s in sizes]
         or [np.zeros((0,), np.int32)]
     )
-    if len(arrays) == 1:  # hot path: no tag needed, sort raw int32 keys
+    if len(arrays) <= 1:  # hot path: no tag needed, sort raw int32 keys
+        layout = "contiguous"
         comp = keys
         pad_comp = np.iinfo(np.int32).max
         comp_rows = np.full((p, n_p), pad_comp, np.int32)
@@ -156,19 +222,46 @@ def pack_segments(
         pad_comp = np.int64(len(arrays)) << SEG_SHIFT
         comp_rows = np.full((p, n_p), pad_comp, np.int64)
     pos_rows = np.full((p, n_p), -1, np.int32)
-    q, rem = divmod(total, p)
-    off = 0
-    for k in range(p):
-        c = q + (1 if k < rem else 0)
-        comp_rows[k, :c] = comp[off : off + c]
-        pos_rows[k, :c] = pos[off : off + c]
-        off += c
+
+    if layout == "striped":
+        chunks = striped_chunk_sizes(sizes, p)
+        seg_starts = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+        # chunk offsets within each segment: lane k's slice of segment s is
+        # [offs[s, k], offs[s, k + 1]) of that segment's submit order
+        offs = np.concatenate(
+            [np.zeros((len(sizes), 1), np.int64), np.cumsum(chunks, axis=1)],
+            axis=1,
+        )
+        for k in range(p):
+            sel = np.concatenate(
+                [
+                    np.arange(seg_starts[s] + offs[s, k], seg_starts[s] + offs[s, k + 1])
+                    for s in range(len(sizes))
+                ]
+                or [np.zeros((0,), np.int64)]
+            )
+            c = sel.shape[0]
+            comp_rows[k, :c] = comp[sel]
+            pos_rows[k, :c] = pos[sel]
+            # distinct interleaved pad composites: lane k's j-th pad sorts
+            # between other lanes' pads (value j·p + k), so the pad tail
+            # routes evenly instead of one constant per-lane run
+            comp_rows[k, c:] = pad_comp | (
+                np.arange(n_p - c, dtype=np.int64) * p + k
+            )
+    else:
+        off = 0
+        for k, c in enumerate(contiguous_lane_sizes(total, p)):
+            comp_rows[k, :c] = comp[off : off + c]
+            pos_rows[k, :c] = pos[off : off + c]
+            off += c
     return PackedSegments(
         comp=comp_rows,
         pos=pos_rows,
         sizes=sizes,
         p=p,
         n_per_proc=n_p,
+        layout=layout,
     )
 
 
@@ -197,12 +290,14 @@ def segmented_sort_safe(
     The composite keys run through :func:`bsp_sort_safe` (prepare once,
     re-enter route per capacity-ladder rung), with the within-segment index
     as payload. Default config: randomized oversampling starting at the
-    *exact* pair capacity — contiguous segment packing makes every lane's
-    run value-clustered (it spans only a couple of segments), which
-    structurally violates the whp per-pair bound, so starting at whp would
-    just waste two executions per multi-segment batch. The receive side is
-    still the Claim 5.1 bound; a batch that overflows it (however skewed)
-    escalates to the allgather terminal tier instead of dropping keys.
+    *exact* pair capacity — the safe choice for the default *contiguous*
+    packing, whose value-clustered lanes structurally violate the whp
+    per-pair bound. Batches packed with ``layout="striped"`` can instead
+    pass ``pair_capacity="planned"`` with the capacity planner's
+    segment-aware bound (``repro.planner``) and start sub-exact. The
+    receive side is still the Claim 5.1 bound; a batch that overflows it
+    (however skewed) escalates to the allgather terminal tier instead of
+    dropping keys.
     """
     if cfg is None:
         cfg = SortConfig(
@@ -275,6 +370,7 @@ def sort_segments(
     *,
     n_per_proc: Optional[int] = None,
     min_n_per_proc: int = 8,
+    layout: str = "contiguous",
     stats: Optional[TierStats] = None,
     executor: Optional[SortExecutor] = None,
     rng: Optional[jax.Array] = None,
@@ -282,7 +378,8 @@ def sort_segments(
 ) -> SegmentedResult:
     """Convenience: pack + fused-sort + unpack a batch of ragged requests."""
     packed = pack_segments(
-        arrays, p, n_per_proc=n_per_proc, min_n_per_proc=min_n_per_proc
+        arrays, p, n_per_proc=n_per_proc, min_n_per_proc=min_n_per_proc,
+        layout=layout,
     )
     return segmented_sort_safe(
         packed, rng=rng, stats=stats, executor=executor, **overrides

@@ -86,9 +86,16 @@ class SortConfig:
     capacity_factor: float = 1.0
     pad_align: int = 8
     # pair capacity mode for a2a_dense: "exact" (= n_per_proc, distribution
-    # independent) or "whp" (Chernoff-scale n/p^2 bound; production setting,
-    # overflow detected & surfaced as a retriable fault).
+    # independent), "whp" (Chernoff-scale n/p^2 bound; production setting,
+    # overflow detected & surfaced as a retriable fault), or "planned" (a
+    # host-computed bound carried in ``pair_cap_override`` — the capacity
+    # planner's segment-aware w.h.p. bound for fused multi-segment batches,
+    # see repro.planner.capacity).
     pair_capacity: str = "exact"
+    # pair_capacity="planned": the per-(src,dst) capacity the planner solved
+    # for (keys, pre-alignment). Tier-only — normalised away by
+    # ``prepare_key`` like the other capacity fields.
+    pair_cap_override: Optional[int] = None
     # receive-buffer sizing: "bound" (Lemma/Claim 5.1 × capacity_factor) or
     # "full" (= n — nothing can ever overflow; the ladder's terminal tier).
     n_max_mode: str = "bound"
@@ -157,12 +164,17 @@ class SortConfig:
         """Per-(src,dst) capacity for the dense all_to_all schedule."""
         if self.pair_capacity == "exact":
             return round_up(self.n_per_proc, self.pad_align)
-        # w.h.p. bound: n/p^2 bucket share, (1+1/ω) expansion, +ω·p slack.
-        cap = int(
-            (1.0 + 1.0 / self.omega_eff) * (self.n_per_proc / self.p)
-            + self.omega_eff * self.p
-        )
-        cap = int(math.ceil(cap * self.capacity_factor))
+        if self.pair_capacity == "planned":
+            # host-solved segment-aware bound (repro.planner.capacity);
+            # capacity_factor carries the ladder's ×2 escalation.
+            cap = int(math.ceil(self.pair_cap_override * self.capacity_factor))
+        else:
+            # w.h.p. bound: n/p^2 bucket share, (1+1/ω) expansion, +ω·p slack.
+            cap = int(
+                (1.0 + 1.0 / self.omega_eff) * (self.n_per_proc / self.p)
+                + self.omega_eff * self.p
+            )
+            cap = int(math.ceil(cap * self.capacity_factor))
         return min(round_up(max(cap, self.pad_align), self.pad_align), round_up(self.n_per_proc, self.pad_align))
 
     # ------------------------------------------------------ capacity ladder
@@ -172,8 +184,10 @@ class SortConfig:
         ``((name, SortConfig), ...)`` ordered cheapest-first:
 
         * ``whp``       — the configured w.h.p. pair capacity (Claim 5.1);
-        * ``whp2``      — the same bound Chernoff-scaled ×2 (squares the
-          already-polynomially-small failure probability);
+          or ``planned`` — the planner's segment-aware bound
+          (``pair_cap_override``; repro.planner.capacity);
+        * ``whp2``/``planned2`` — the same bound Chernoff-scaled ×2 (squares
+          the already-polynomially-small failure probability);
         * ``exact``     — pair_cap = n/p, receive side at the Lemma 5.1 /
           Claim 5.1 bound — distribution independent for ``det``;
         * ``allgather`` — reference schedule with a full-size (n) receive
@@ -189,20 +203,36 @@ class SortConfig:
         tiers = []
         if (
             self.routing == "a2a_dense"
-            and self.pair_capacity == "whp"
+            and self.pair_capacity in ("whp", "planned")
             and self.n_max_mode == "bound"
         ):
-            tiers.append(("whp", self))
+            tiers.append((self.pair_capacity, self))
             tiers.append(
-                ("whp2", dataclasses.replace(self, capacity_factor=2.0 * self.capacity_factor))
+                (
+                    self.pair_capacity + "2",
+                    dataclasses.replace(self, capacity_factor=2.0 * self.capacity_factor),
+                )
             )
         if not (self.routing == "allgather" and self.n_max_mode == "full"):
-            tiers.append(("exact", dataclasses.replace(self, pair_capacity="exact")))
+            # drop the override so two ladders that differ only in their
+            # planned bound share ONE compiled exact/allgather rung
+            tiers.append(
+                (
+                    "exact",
+                    dataclasses.replace(
+                        self, pair_capacity="exact", pair_cap_override=None
+                    ),
+                )
+            )
         tiers.append(
             (
                 "allgather",
                 dataclasses.replace(
-                    self, routing="allgather", pair_capacity="exact", n_max_mode="full"
+                    self,
+                    routing="allgather",
+                    pair_capacity="exact",
+                    pair_cap_override=None,
+                    n_max_mode="full",
                 ),
             )
         )
@@ -219,15 +249,22 @@ class SortConfig:
         callable and one :class:`PreparedSort`, which is what lets the
         escalation driver re-enter only the route stage per rung.
         ``merge`` (Ph6) is also normalised: it only affects the route stage
-        but not the prepared state.
+        but not the prepared state. ``omega`` is normalised for every
+        algorithm except ``det`` (whose prepare includes the Ph3
+        sample/splitter computation): iran/ran draw their sample inside the
+        route stage and bitonic has no sample, so the prepare callable is
+        omega-independent there — which lets the capacity planner tune the
+        oversampling ratio per batch without retracing prepare.
         """
         return dataclasses.replace(
             self,
             capacity_factor=1.0,
             pair_capacity="exact",
+            pair_cap_override=None,
             routing="a2a_dense",
             n_max_mode="bound",
             merge="sort",
+            omega=self.omega if self.algorithm == "det" else None,
         )
 
     def validate(self) -> None:
@@ -239,6 +276,10 @@ class SortConfig:
             raise ValueError("n_per_proc must be >= 1")
         if self.n_max_mode not in ("bound", "full"):
             raise ValueError(f"unknown n_max_mode {self.n_max_mode!r}")
+        if self.pair_capacity not in ("exact", "whp", "planned"):
+            raise ValueError(f"unknown pair_capacity {self.pair_capacity!r}")
+        if self.pair_capacity == "planned" and not self.pair_cap_override:
+            raise ValueError("pair_capacity='planned' needs pair_cap_override")
 
 
 @dataclasses.dataclass

@@ -23,7 +23,14 @@ import numpy as np
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core import TierStats
 from repro.models.layers import dtype_of
+from repro.planner import CapacityPlanner
 from repro.service import ServiceConfig, SortService
+
+#: shared across the per-call throwaway services below — compiled programs
+#: already pool in the default executor; pooling the planner the same way
+#: lets its per-bucket tier learning accumulate across calls instead of
+#: being discarded with each one-shot service.
+_DEFAULT_PLANNER = CapacityPlanner()
 
 
 def synthetic_batch(
@@ -72,7 +79,9 @@ def length_bucketed_order(
     """
     if service is None:
         service = SortService(
-            ServiceConfig(p=p, algorithm=algorithm, seed=seed), stats=stats
+            ServiceConfig(p=p, algorithm=algorithm, seed=seed),
+            stats=stats,
+            planner=_DEFAULT_PLANNER,
         )
     elif service.cfg.p != p:
         raise ValueError(

@@ -348,6 +348,7 @@ def moe_ep_safe(
     mesh_info: MoEMeshInfo,
     capacity_factor: float = 1.25,
     stats: Optional[TierStats] = None,
+    planner=None,
 ) -> Tuple[jnp.ndarray, Dict, TierStats]:
     """Overflow-safe EP dispatch: escalate the capacity tier on token drop.
 
@@ -358,14 +359,31 @@ def moe_ep_safe(
     (src, dst) row at n records, which cannot overflow. Use at serving /
     evaluation time (top-level calls with a host sync per layer); the jitted
     train step keeps the fixed-capacity :func:`moe_ep`.
+
+    ``planner`` (a :class:`repro.planner.CapacityPlanner`) is an optional
+    traffic-learned policy over the same ladder: a model whose router
+    keeps dropping tokens at the ``whp`` guess stops paying the doomed
+    attempt and starts at the rung that empirically serves.
     """
     stats = stats if stats is not None else TierStats()
-    for tier, cf in moe_capacity_ladder(capacity_factor, mesh_info.model_size):
+    ladder = moe_capacity_ladder(capacity_factor, mesh_info.model_size)
+    n_rungs, bucket = len(ladder), None
+    if planner is not None and n_rungs > 1:
+        bucket = (
+            f"moe/{cfg.name}/ep{mesh_info.model_size}"
+            f"/t{x.shape[0] * x.shape[1]}/cf{capacity_factor}"
+        )
+        ladder = ladder[planner.rung_for(bucket, n_rungs) :]
+    faulted = False
+    for tier, cf in ladder:
         y, aux = _moe_ep_jitted(cfg, mesh_info, cf)(params, x)
         ok = not bool(aux["overflow"])
         stats.record(tier, ok)
         if ok:
+            if bucket is not None:
+                planner.observe(bucket, faulted, n_rungs)
             return y, aux, stats
+        faulted = True
     raise RuntimeError(
         "EP capacity escalation exhausted — unreachable: the full tier "
         "holds every record"

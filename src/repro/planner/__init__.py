@@ -1,0 +1,38 @@
+"""Adaptive capacity planner — segment-aware oversampling bounds plus
+traffic-learned tier selection for the BSP sort service.
+
+Data flow (see README.md in this package):
+
+    fingerprint.py   sort-free workload summary (sizes, lane segment
+                     spread, sampled duplicate fractions) + bucket keys
+    capacity.py      segment-aware w.h.p. pair-capacity bound for striped
+                     fused batches; solves for the oversampling ratio
+    planner.py       CapacityPlanner: bucket → (starting tier, ω) with
+                     JSON-persisted fault-rate feedback
+
+Consumers: ``repro.service.SortService`` (the ``pair_capacity="auto"``
+resolution), and the optional ``planner=`` policy hooks of
+``repro.core.bsp_sort_safe`` and ``repro.models.moe.moe_ep_safe``.
+"""
+from .capacity import planned_cap_for, segment_aware_pair_cap, solve_omega
+from .fingerprint import (
+    Fingerprint,
+    bucket_key,
+    fingerprint_arrays,
+    lane_spread,
+    sampled_dup_fraction,
+)
+from .planner import CapacityPlanner, PlanDecision
+
+__all__ = [
+    "CapacityPlanner",
+    "Fingerprint",
+    "PlanDecision",
+    "bucket_key",
+    "fingerprint_arrays",
+    "lane_spread",
+    "planned_cap_for",
+    "sampled_dup_fraction",
+    "segment_aware_pair_cap",
+    "solve_omega",
+]

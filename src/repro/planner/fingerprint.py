@@ -1,0 +1,169 @@
+"""Workload fingerprints — the cheap, sort-free summary a batch is planned by.
+
+The capacity planner must decide a starting tier *before* sorting, from
+quantities that cost o(n·log n) to compute:
+
+* shape: total keys, processor lanes, the pow2 ``n_per_proc`` bucket;
+* structure: segment count and per-segment sizes (known exactly from the
+  request queue — no data inspection needed);
+* **lane segment spread** — how many segments overlap each lane's run under
+  the *contiguous* packing geometry. ``lane_spread_max == 1`` is the
+  single-segment hot path; anything larger is the regime where contiguous
+  packing value-clusters lanes and the planner switches to the striped
+  layout (``core/segmented.pack_segments(layout="striped")``);
+* **sampled duplicate fraction** per segment — the share of the segment
+  occupied by its most frequent key value, estimated from a bounded sample.
+  Duplicate blocks sort contiguously (ordered by source (lane, idx) under
+  the stable pipeline), so a lane's copies of one value concentrate into
+  one routing bucket; the segment-aware capacity bound
+  (``planner.capacity``) inflates per-segment contributions by this
+  fraction.
+
+Fingerprints quantize into **buckets** (:func:`bucket_key`): pow2 segment
+count, coarse duplicate level, exact (p, n_per_proc) shape. Buckets are the
+unit of traffic learning — the planner's fault history is kept per bucket,
+so the key must be coarse enough to accumulate statistics and fine enough
+that one rung fits all members.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.segmented import _pow2_n_per_proc, contiguous_lane_sizes
+
+#: sample size per segment for the duplicate-fraction estimate
+DUP_SAMPLE = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class Fingerprint:
+    """Sort-free workload summary of one (to-be-)fused batch."""
+
+    n_keys: int
+    p: int
+    n_per_proc: int  # pow2 bucket the batch packs into
+    sizes: Tuple[int, ...]  # per-segment lengths, submit order
+    lane_spread_max: int  # segments overlapping the busiest contiguous lane
+    lane_spread_mean: float
+    dup_fractions: Tuple[float, ...]  # sampled per-segment top-value share
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def dup_fraction(self) -> float:
+        """Size-weighted mean duplicate fraction of the batch."""
+        if not self.sizes or self.n_keys == 0:
+            return 0.0
+        w = np.asarray(self.sizes, np.float64)
+        return float((w * np.asarray(self.dup_fractions)).sum() / w.sum())
+
+    @property
+    def pad_keys(self) -> int:
+        return self.p * self.n_per_proc - self.n_keys
+
+
+def sampled_dup_fraction(
+    keys: np.ndarray, sample: int = DUP_SAMPLE, seed: int = 0
+) -> float:
+    """Estimate the share of ``keys`` held by its most frequent value.
+
+    Samples ``min(len, sample)`` keys (deterministic rng) and returns the
+    top sampled value's frequency share — an upward-biased-enough estimate
+    for capacity planning (the Monte-Carlo test in tests/test_planner.py
+    checks the *bound built on it*, not the estimator in isolation).
+    """
+    n = int(keys.shape[0])
+    if n == 0:
+        return 0.0
+    if n <= sample:
+        pick = np.asarray(keys)
+    else:
+        idx = np.random.default_rng(seed).choice(n, size=sample, replace=False)
+        pick = np.asarray(keys)[idx]
+    _, counts = np.unique(pick, return_counts=True)
+    return float(counts.max() / pick.size)
+
+
+def lane_spread(sizes: Sequence[int], p: int) -> Tuple[int, float]:
+    """(max, mean) segments overlapping each lane under contiguous packing.
+
+    Contiguous packing deals the submit-order concatenation into p
+    even-share lanes; a lane "overlaps" every segment that contributes at
+    least one key to it. This is the geometry that value-clusters lanes:
+    spread ≈ R/p means each lane sees only a sliver of the batch's value
+    range.
+    """
+    sizes = [int(s) for s in sizes if int(s) > 0]
+    total = sum(sizes)
+    if not sizes or p <= 0 or total == 0:
+        return 0, 0.0
+    bounds = np.cumsum([0] + sizes)  # segment extents in submit order
+    spreads = []
+    off = 0
+    # the same lane deal pack_segments uses — shared so the fingerprint
+    # can never drift from the actual contiguous packing geometry
+    for c in contiguous_lane_sizes(total, p):
+        if c == 0:
+            spreads.append(0)
+            continue
+        lo = np.searchsorted(bounds, off, side="right") - 1
+        hi = np.searchsorted(bounds, off + c - 1, side="right") - 1
+        spreads.append(int(hi - lo + 1))
+        off += c
+    return int(max(spreads)), float(np.mean(spreads))
+
+
+def fingerprint_arrays(
+    arrays: Sequence[np.ndarray],
+    p: int,
+    *,
+    n_per_proc: Optional[int] = None,
+    min_n_per_proc: int = 8,
+    sample: int = DUP_SAMPLE,
+    seed: int = 0,
+) -> Fingerprint:
+    """Fingerprint a batch of ragged request arrays without sorting them."""
+    sizes = tuple(int(np.asarray(a).shape[0]) for a in arrays)
+    total = sum(sizes)
+    n_p = n_per_proc or _pow2_n_per_proc(total, p, min_n_per_proc)
+    smax, smean = lane_spread(sizes, p)
+    dups = tuple(
+        sampled_dup_fraction(np.asarray(a).reshape(-1), sample, seed + i)
+        for i, a in enumerate(arrays)
+    )
+    return Fingerprint(
+        n_keys=total,
+        p=p,
+        n_per_proc=n_p,
+        sizes=sizes,
+        lane_spread_max=smax,
+        lane_spread_mean=smean,
+        dup_fractions=dups,
+    )
+
+
+def _pow2_bucket(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length() if x > 0 else 0
+
+
+def dup_level(frac: float) -> int:
+    """Coarse duplicate regime: 0 = distinct-ish, 1 = mixed, 2 = heavy."""
+    return 0 if frac < 0.05 else (1 if frac < 0.35 else 2)
+
+
+def bucket_key(fp: Fingerprint) -> str:
+    """The traffic-learning bucket this fingerprint falls into.
+
+    Shape is exact (each (p, n_per_proc) is its own compiled program
+    anyway); segment count rounds to a power of two; duplicates quantize to
+    three levels. O(log n · log R · 3) distinct buckets across any traffic.
+    """
+    return (
+        f"p{fp.p}/npp{fp.n_per_proc}"
+        f"/segs{_pow2_bucket(fp.n_segments)}/dup{dup_level(fp.dup_fraction)}"
+    )

@@ -3,13 +3,19 @@ tagged, segmented BSP sort (the layer between the sort library and its
 serving/data consumers).
 
     SortService    — request queue + dispatch: submit ragged int32 arrays,
-                     flush() packs them into pow2-bucketed batches, runs one
-                     overflow-safe segmented sort per batch, and returns
-                     every request sorted with its stable argsort, latency
-                     and capacity-tier telemetry.
+                     flush() (caller-driven, or auto via max_pending /
+                     flush_after_s triggers) packs them into pow2-bucketed
+                     batches, runs one overflow-safe segmented sort per
+                     batch, and returns every request sorted with its
+                     stable argsort, latency and capacity-tier telemetry.
+                     Starting tiers are resolved per batch by the capacity
+                     planner (repro.planner): fingerprint → segment-aware
+                     whp bound over the striped layout → traffic-learned
+                     rung, with fault outcomes fed back.
     BatchFormer    — the pow2 length-bucketed batch former (bounds XLA
                      recompiles to one program per bucket shape).
-    ServiceConfig  — p / algorithm / capacity-tier / bucketing knobs.
+    ServiceConfig  — p / algorithm / capacity-tier / bucketing / auto-flush
+                     / planner-persistence knobs.
     RequestResult  — per-request output record.
 """
 from .batch import Batch, BatchFormer

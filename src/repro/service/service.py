@@ -13,17 +13,27 @@ workload:
   tagged fusion of every request in the batch), and returns every
   *unclaimed* result. Completed results stay in the service's store until
   claimed (``take_result`` / ``sort_one`` / ``sort_many``), so a request
-  piggybacked onto another caller's flush is never lost;
+  piggybacked onto another caller's flush is never lost. Flushes also fire
+  automatically from ``submit`` when configured: ``max_pending`` queued
+  requests (size trigger) or an oldest-request age past ``flush_after_s``
+  (deadline trigger — also checkable via :meth:`maybe_flush` from an event
+  loop), so trickle traffic gets bounded tail latency; telemetry records
+  which trigger fired;
 * escalation is per batch through ``bsp_sort_safe``'s capacity-tier
   ladder, so one adversarial request escalates only its own batch. The
-  starting tier is picked per batch (``pair_capacity="auto"``): a
-  single-segment batch runs the classic cheap regime whp → whp×2 → exact
-  → allgather, while a multi-segment batch starts at exact → allgather —
-  contiguous segment packing value-clusters every lane's run, which
-  structurally violates the whp per-pair bound, so whp rungs would only
-  waste full sort executions there;
+  starting tier is resolved per batch (``pair_capacity="auto"``) by the
+  **capacity planner** (:class:`repro.planner.CapacityPlanner`): the batch
+  is fingerprinted (sizes, lane segment spread, sampled duplicate
+  fractions), multi-segment batches are packed *striped* so each lane
+  holds ~1/p of every segment, and the planner's segment-aware whp bound
+  picks a sub-exact ``planned`` pair capacity — replacing PR 3's rule that
+  pinned every fused batch to ``exact``. Observed fault outcomes feed back
+  into the planner's per-bucket rung history (JSON-persisted via
+  ``planner_path``), so tiers adapt to live traffic. An explicit
+  ``pair_capacity="whp"``/``"exact"`` still pins every batch;
 * telemetry: per-request wall latency (submit → result), the accumulated
-  :class:`TierStats` of every escalation, per-bucket batch counts, and the
+  :class:`TierStats` of every escalation, per-bucket batch counts,
+  auto-flush trigger counts, planner plan/promotion counters, and the
   shared :class:`SortExecutor`'s trace counts for compile-reuse assertions.
 
 One process-wide default executor serves all services, so every service
@@ -31,15 +41,18 @@ instance (and every other sort caller) shares compiled programs per bucket.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+import warnings
+from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import TierStats
 from repro.core.api import SortExecutor, default_executor
 from repro.core.segmented import pack_segments, segmented_sort_safe
+from repro.planner import CapacityPlanner
 from repro.service.batch import BatchFormer
 
 
@@ -49,21 +62,25 @@ class ServiceConfig:
 
     p: int = 8  # simulated-processor lanes per fused sort
     algorithm: str = "iran"  # randomized oversampling: production default
-    # First capacity tier, resolved per batch when "auto":
-    # * single-segment batch → "whp": the classic cheap production regime
-    #   (each lane holds an even, distribution-representative share);
-    # * multi-segment batch → "exact": contiguous segment packing
-    #   value-clusters each lane's run (it spans only a couple of
-    #   segments and routes almost whole to one or two destinations,
-    #   where the whp bound assumes per-pair shares near n/p²), so the
-    #   whp rungs would fault structurally and waste two full sort
-    #   executions per batch before exact serves.
-    # An explicit "whp"/"exact" pins the starting tier for every batch.
+    # First capacity tier, resolved per batch when "auto": the capacity
+    # planner fingerprints the batch and picks (layout, starting tier,
+    # oversampling ratio) — single-segment batches keep the raw-int32
+    # contiguous hot path, multi-segment batches pack striped and start at
+    # the segment-aware planned bound (repro.planner). An explicit
+    # "whp"/"exact" pins the starting tier for every batch.
     pair_capacity: str = "auto"
     local_sort: str = "lax"
     max_batch_keys: int = 1 << 16  # batch former's packing cap
     min_n_per_proc: int = 8
     seed: int = 0
+    # planner history persistence (pair_capacity="auto" only); None keeps
+    # the learned rungs in-process
+    planner_path: Optional[str] = None
+    # auto-flush triggers (both optional): flush from submit() once this
+    # many requests are pending / once the oldest pending request is older
+    # than this deadline. Caller-driven flush() stays supported.
+    max_pending: Optional[int] = None
+    flush_after_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -92,37 +109,117 @@ class SortService:
         *,
         executor: Optional[SortExecutor] = None,
         stats: Optional[TierStats] = None,
+        planner: Optional[CapacityPlanner] = None,
     ) -> None:
+        # reject unsupported pins up front: "planned" needs a per-batch
+        # bound only the planner can supply — a pinned service would raise
+        # inside flush and the crash-safe re-queue would then re-raise on
+        # every later flush (the request could never complete)
+        if cfg.pair_capacity not in ("auto", "whp", "exact"):
+            raise ValueError(
+                f"unsupported service pair_capacity {cfg.pair_capacity!r}: "
+                "use 'auto' (planner-resolved) or pin 'whp'/'exact'"
+            )
         self.cfg = cfg
         self.executor = executor if executor is not None else default_executor()
         self.stats = stats if stats is not None else TierStats()
+        # the capacity planner resolves "auto" starting tiers; a shared
+        # instance lets several services pool their traffic history
+        self.planner = (
+            planner
+            if planner is not None
+            else CapacityPlanner(path=cfg.planner_path)
+        )
         self.former = BatchFormer(
             cfg.p, cfg.max_batch_keys, cfg.min_n_per_proc
         )
         self._pending: List[_Pending] = []
         self._completed: Dict[int, RequestResult] = {}  # unclaimed results
         self._next_rid = 0
-        # telemetry
-        self.latencies: List[float] = []  # per-request, completion order
+        # telemetry — latencies keep a bounded window (a long-lived serving
+        # process must not grow one float per request forever); the
+        # lifetime request count is its own counter
+        self.latencies: Deque[float] = collections.deque(maxlen=1 << 16)
+        self.requests_done = 0
         self.batches_dispatched = 0
         self.keys_sorted = 0
         self.bucket_counts: Dict[int, int] = {}  # n_per_proc -> batches
+        self.flush_triggers: Dict[str, int] = {}  # manual/size/deadline
+        self.start_tiers: Dict[str, int] = {}  # starting tier -> batches
 
     # ------------------------------------------------------------- queue
     def submit(self, keys: np.ndarray) -> int:
-        """Queue one ragged request (1-D int32 keys); returns its id."""
+        """Queue one ragged request (1-D int32 keys); returns its id.
+
+        May flush the queue before returning when an auto-flush trigger is
+        configured and fires — the submitted request's result is then
+        already claimable (``take_result``).
+        """
         arr = np.asarray(keys, np.int32).reshape(-1)
         rid = self._next_rid
         self._next_rid += 1
         self._pending.append(_Pending(rid, arr, time.perf_counter()))
+        if (
+            self.cfg.max_pending is not None
+            and len(self._pending) >= self.cfg.max_pending
+        ):
+            self.flush(trigger="size")
+        else:
+            self.maybe_flush()
         return rid
+
+    def maybe_flush(self) -> bool:
+        """Deadline check: flush if the oldest pending request is overdue.
+
+        Called from ``submit`` and pollable from an event loop (the service
+        has no thread of its own, so a deadline only fires when *somebody*
+        calls in). Returns whether a flush ran.
+        """
+        if (
+            self.cfg.flush_after_s is not None
+            and self._pending
+            and time.perf_counter() - self._pending[0].submitted_at
+            >= self.cfg.flush_after_s
+        ):
+            self.flush(trigger="deadline")
+            return True
+        return False
 
     @property
     def pending(self) -> int:
         return len(self._pending)
 
     # ---------------------------------------------------------- dispatch
-    def flush(self) -> Dict[int, RequestResult]:
+    def _resolve_batch(self, batch):
+        """(packed, sort overrides, decision) for one formed batch."""
+        if self.cfg.pair_capacity != "auto":  # explicit pin: PR 3 behaviour
+            packed = pack_segments(
+                batch.arrays,
+                self.cfg.p,
+                n_per_proc=batch.n_per_proc,
+                min_n_per_proc=self.cfg.min_n_per_proc,
+            )
+            return packed, {"pair_capacity": self.cfg.pair_capacity}, None
+        decision = self.planner.plan(
+            batch.arrays,
+            self.cfg.p,
+            n_per_proc=batch.n_per_proc,
+            min_n_per_proc=self.cfg.min_n_per_proc,
+        )
+        packed = pack_segments(
+            batch.arrays,
+            self.cfg.p,
+            n_per_proc=batch.n_per_proc,
+            min_n_per_proc=self.cfg.min_n_per_proc,
+            layout=decision.layout,
+        )
+        overrides = {"pair_capacity": decision.pair_capacity}
+        if decision.pair_capacity == "planned":
+            overrides["pair_cap_override"] = decision.pair_cap_override
+            overrides["omega"] = decision.omega
+        return packed, overrides, decision
+
+    def flush(self, trigger: str = "manual") -> Dict[int, RequestResult]:
         """Sort everything queued; one fused segmented sort per batch.
 
         Returns every unclaimed result — the newly completed ones plus any
@@ -132,29 +229,33 @@ class SortService:
         """
         todo, self._pending = self._pending, []
         results = self._completed
+        if todo:
+            self.flush_triggers[trigger] = (
+                self.flush_triggers.get(trigger, 0) + 1
+            )
         submitted = {r.rid: r.submitted_at for r in todo}
         completed_rids = set()
         try:
             for batch in self.former.form([(r.rid, r.keys) for r in todo]):
-                packed = pack_segments(
-                    batch.arrays,
-                    self.cfg.p,
-                    n_per_proc=batch.n_per_proc,
-                    min_n_per_proc=self.cfg.min_n_per_proc,
-                )
-                pair_capacity = self.cfg.pair_capacity
-                if pair_capacity == "auto":
-                    pair_capacity = (
-                        "whp" if len(batch.arrays) == 1 else "exact"
-                    )
+                packed, overrides, decision = self._resolve_batch(batch)
+                batch_stats = TierStats()  # isolates this batch's outcome
                 seg = segmented_sort_safe(
                     packed,
                     algorithm=self.cfg.algorithm,
-                    pair_capacity=pair_capacity,
                     local_sort=self.cfg.local_sort,
                     seed=self.cfg.seed,
-                    stats=self.stats,  # accumulates across batches/calls
+                    stats=batch_stats,
                     executor=self.executor,
+                    **overrides,
+                )
+                self.stats.merge_from(batch_stats)
+                if decision is not None:
+                    # planner feedback: did the starting tier overflow?
+                    self.planner.record(
+                        decision, faulted=batch_stats.retries > 0
+                    )
+                self.start_tiers[overrides["pair_capacity"]] = (
+                    self.start_tiers.get(overrides["pair_capacity"], 0) + 1
                 )
                 self.batches_dispatched += 1
                 self.keys_sorted += batch.total_keys
@@ -165,6 +266,7 @@ class SortService:
                 for rid, keys, order in zip(batch.rids, seg.keys, seg.order):
                     lat = done - submitted[rid]
                     self.latencies.append(lat)
+                    self.requests_done += 1
                     results[rid] = RequestResult(
                         rid=rid,
                         keys=keys,
@@ -182,6 +284,13 @@ class SortService:
                 self._pending = [
                     r for r in todo if r.rid not in completed_rids
                 ] + self._pending
+            # one history write per flush (not per batch), raise or not.
+            # Persistence is telemetry, not dispatch: an unwritable path
+            # must neither fail completed sorts nor mask a batch exception.
+            try:
+                self.planner.save_if_dirty()
+            except OSError as e:
+                warnings.warn(f"planner history not persisted: {e}")
         return dict(results)
 
     def take_result(self, rid: int) -> RequestResult:
@@ -208,14 +317,19 @@ class SortService:
         return self._completed.pop(rid)
 
     def telemetry(self) -> Dict[str, object]:
-        """Flat snapshot for logs/benchmark rows."""
-        lat = np.asarray(self.latencies, np.float64)
+        """Flat snapshot for logs/benchmark rows; latency stats cover the
+        bounded recent window, ``requests`` the service lifetime."""
+        lat = np.fromiter(self.latencies, np.float64)
         row: Dict[str, object] = {
-            "requests": int(lat.size),
+            "requests": self.requests_done,
             "batches": self.batches_dispatched,
             "keys_sorted": self.keys_sorted,
             "buckets": dict(sorted(self.bucket_counts.items())),
+            "flush_triggers": dict(sorted(self.flush_triggers.items())),
+            "start_tiers": dict(sorted(self.start_tiers.items())),
         }
+        if self.cfg.pair_capacity == "auto":
+            row["planner"] = self.planner.telemetry()
         if lat.size:
             row["lat_mean_ms"] = round(float(lat.mean()) * 1e3, 3)
             row["lat_p99_ms"] = round(float(np.quantile(lat, 0.99)) * 1e3, 3)

@@ -108,3 +108,29 @@ def test_router_aux_losses_shapes():
     _, aux = moe_mod.moe_tp(lp, x, cfg)
     assert aux["lb_loss"].shape == () and aux["z_loss"].shape == ()
     assert float(aux["lb_loss"]) >= 0.99  # ≥1 with equality at perfect balance
+
+
+def test_ep_safe_planner_policy_stops_paying_doomed_whp():
+    """Optional capacity-planner policy on the EP ladder: a config whose
+    whp capacity guess keeps dropping tokens starts at the learned rung
+    after enough evidence — later calls skip the doomed whp attempt while
+    the output still matches dense."""
+    from repro.planner import CapacityPlanner
+
+    cfg, lp, x = _setup()
+    ref = _dense_reference(cfg, lp, x)
+    pl = CapacityPlanner(fault_target=0.05, min_attempts=2)
+    for _ in range(4):  # undersized guess: whp faults every call
+        got, aux, stats = moe_mod.moe_ep_safe(
+            lp, x, cfg, moe_mod.MoEMeshInfo(), capacity_factor=0.01, planner=pl
+        )
+        assert not bool(aux["overflow"])
+    (bucket,) = pl.history
+    assert bucket.startswith("moe/") and pl.history[bucket]["rung"] >= 1
+    got, aux, stats = moe_mod.moe_ep_safe(
+        lp, x, cfg, moe_mod.MoEMeshInfo(), capacity_factor=0.01, planner=pl
+    )
+    assert "whp" not in stats.attempts, stats.as_row()  # learned start
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=3e-2, rtol=3e-2
+    )

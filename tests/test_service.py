@@ -94,10 +94,10 @@ def test_segmented_adversarial_batch_escalates_not_truncates():
 
 def test_default_service_serves_multi_segment_batches_first_tier():
     """Perf guard: the default config must serve a benign multi-segment
-    batch at its FIRST ladder rung with zero retries. (Contiguous segment
-    packing structurally violates the whp per-pair bound, which is why the
-    service starts at the exact tier — a default that always faults would
-    silently run every batch ~3×.)"""
+    batch at its FIRST ladder rung with zero retries. (Since PR 4 that
+    rung is the planner's segment-aware ``planned`` capacity over the
+    striped layout — a default that always faults would silently run
+    every batch ~3×.)"""
     rng = np.random.default_rng(7)
     arrays = [rng.integers(0, 2**31, 512).astype(np.int32) for _ in range(16)]
     svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
@@ -233,15 +233,23 @@ def test_single_segment_int32_path_handles_max_key_collisions():
     assert (np.diff(sel) > 0).all()  # stable within the collided maxima
 
 
-def test_single_segment_batch_serves_on_cheap_whp_tier():
-    """The auto tier keeps the old cheap regime for single-segment sorts
-    (serve admission / data bucketing): a benign corpus must be served by
-    the whp rung, not forced onto exact's p×-larger routing buffers."""
+def test_single_segment_batch_serves_on_cheap_sub_exact_tier():
+    """The auto tier keeps the cheap regime for single-segment sorts (serve
+    admission / data bucketing): a benign corpus must be served by a
+    sub-exact rung with zero retries — since PR 4 that is the planner's
+    ``planned`` capacity (at most the classic whp bound, and pad-aware),
+    not exact's p×-larger routing buffers."""
     lens = np.random.default_rng(11).integers(1, 5000, 999).astype(np.int32)
     svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
     res = svc.sort_one(lens)
     assert np.array_equal(res.keys, np.sort(lens))
-    assert res.tier == "whp" and svc.stats.retries == 0, svc.stats.as_row()
+    assert res.tier == "planned" and svc.stats.retries == 0, svc.stats.as_row()
+    # an explicit pin still forces the classic whp regime
+    svc = SortService(
+        ServiceConfig(p=8, pair_capacity="whp"), executor=SortExecutor()
+    )
+    res = svc.sort_one(lens)
+    assert res.tier == "whp" and np.array_equal(res.keys, np.sort(lens))
 
 
 def test_flush_requeues_admitted_requests_on_batch_failure(monkeypatch):

@@ -76,6 +76,71 @@ def fmt_row(cells: List, widths=None) -> str:
     return ",".join(str(c) for c in cells)
 
 
+def sharded_collective_counts(
+    combos: Dict[str, Dict], p: int = 8, n_p: int = 128
+) -> Dict[str, Dict[str, int]]:
+    """Collective-op counts in the shard_map lowering of the full sort.
+
+    Collectives only appear as HLO ops under ``shard_map`` (the vmap runner
+    batches them into transposes), and forcing host devices must happen
+    before jax initializes — so the lowering runs in a subprocess with
+    ``p`` forced host devices (the tests/test_distributed.py idiom).
+    Lowering only: nothing is compiled or executed.
+
+    ``combos`` maps row name -> SortConfig override kwargs plus ``nv`` (the
+    payload count). Returns ``{name: {"all_to_all": n, "all_gather": n}}``.
+    The single source of truth for both the ``hotpath`` table's identity
+    column and the tests/test_hotpath_fusion.py HLO regression — caveat for
+    both: ``all_gather`` matches a fixed number of times per op in the
+    StableHLO text (more than once), so compare *deltas*, not absolutes.
+    """
+    import json
+    import subprocess
+    import sys
+    import textwrap
+
+    src = textwrap.dedent(
+        f"""
+        import json, re
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core import SortConfig
+        from repro.core.api import SortExecutor
+        combos = json.loads({json.dumps(json.dumps(combos))})
+        p, n_p = {p}, {n_p}
+        mesh = Mesh(np.array(jax.devices()), ("procs",))
+        out = {{}}
+        for name, kw in combos.items():
+            nv = kw.pop("nv", 0)
+            fn = SortExecutor().sort_sharded(
+                SortConfig(p=p, n_per_proc=n_p, **kw), mesh, "procs", nv
+            )
+            args = [jax.random.key_data(jax.random.key(0)),
+                    jnp.zeros((p, n_p), jnp.int32)]
+            args += [jnp.zeros((p, n_p), jnp.int32)] * nv
+            txt = jax.jit(fn).lower(*args).as_text()
+            out[name] = {{"all_to_all": len(re.findall("all_to_all", txt)),
+                          "all_gather": len(re.findall("all_gather", txt))}}
+        print(json.dumps(out))
+        """
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", src], capture_output=True, text=True, env=env,
+        timeout=560,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"collective-count subprocess failed:\n{r.stderr[-3000:]}"
+        )
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
 #: every emitted row of the current process, in emit order — the JSON
 #: trajectory writer (benchmarks.run --json OUT) drains this.
 ROWS: List[Tuple[str, Dict]] = []

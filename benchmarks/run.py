@@ -71,6 +71,7 @@ def main() -> None:
     go("duplicates", tables.table_duplicate_handling_overhead, M // 4)
     go("capacity", tables.table_capacity_retry, M // 4 if not args.full else 4 * M,
        p=16 if not args.full else 64)
+    go("hotpath", tables.table_hotpath, M // 16 if not args.full else M, p=8)
     go("service", tables.table_service, n_requests=64,
        total=M // 16 if not args.full else M, p=8 if not args.full else 16)
     go("planner", tables.table_planner, n_requests=64,

@@ -386,6 +386,94 @@ def table_planner(n_requests=64, total=1 << 16, p=8, mixes=("U", "G", "B", "DD",
         )
 
 
+def _hotpath_a2a_counts(p: int) -> Dict[str, int]:
+    """HLO ``all_to_all`` op counts per (exchange, kv) combo (one subprocess,
+    shared harness: benchmarks.common.sharded_collective_counts)."""
+    from benchmarks.common import sharded_collective_counts
+
+    combos = {
+        f"{exchange}/kv{nv}": dict(
+            algorithm="iran", pair_capacity="whp", exchange=exchange, nv=nv
+        )
+        for exchange in ("per_array", "fused")
+        for nv in (0, 1)
+    }
+    counts = sharded_collective_counts(combos, p=p)
+    return {name: c["all_to_all"] for name, c in counts.items()}
+
+
+def table_hotpath(n, p=8, mixes=("U", "G", "B", "DD", "zipf")):
+    """Route→merge hot path: {sort, tree} tail × {per-array, fused} exchange.
+
+    The fused exchange packs key + payload rows into one byte buffer so the
+    Ph5 data superstep issues exactly ONE ``all_to_all`` (``a2a_ops`` counts
+    the HLO ops of the whole sort: 1 count-bookkeeping + 1 data superstep
+    fused, vs 1 + (1+R) per-array). The tree tail rank-merges the received
+    sorted runs — payload-generic since this PR, so the key-value rows
+    exercise it end-to-end. Wall-clock is the vmap runner at the *exact*
+    pair capacity (deterministically clean on every mix — escalation
+    behaviour is the ``capacity`` table's job); ``speedup`` is each row
+    against the per-array sort-tail baseline of the same (mix, kv).
+    ``a2a_ops`` is an identity column for bench_diff: a collective-count
+    regression fails structurally, not within a timing tolerance.
+
+    Key-only rows compile to the identical program under both exchange
+    modes (fusing engages only with more than one array), so each
+    (mix, tail) key-only wall is measured once and reported on both rows —
+    re-timing the same callable would only add shared-core noise to the
+    gated baseline.
+    """
+    n_p = n // p
+    counts = _hotpath_a2a_counts(p)  # shape-independent op counts
+    for mix in mixes:
+        x = jnp.asarray(datagen.generate(mix, p, n_p, seed=21))
+        ids = jnp.arange(p * n_p, dtype=jnp.int32).reshape(p, n_p)
+        for kv in (0, 1):
+            vals = [ids] if kv else []
+            base = None
+            for tail in ("sort", "tree"):
+                measured = None  # (wall, complete) reused across kv=0 rows
+                for exchange in ("per_array", "fused"):
+                    cfg = SortConfig(
+                        p=p, n_per_proc=n_p, algorithm="iran",
+                        pair_capacity="exact", merge=tail, exchange=exchange,
+                    )
+
+                    def run(xa, va, cfg=cfg):
+                        res, vbufs = bsp_sort(xa, cfg, values=va)
+                        return res.buf, res.count, vbufs
+
+                    if measured is None or kv:
+                        fn = jax.jit(run)
+                        # tree-vs-sort deltas are ~20% at this size: average
+                        # more repeats than the global default so the speedup
+                        # column is trajectory-stable, not timer noise
+                        t = timeit(fn, x, vals, repeats=6)
+                        buf, cnt, _ = fn(x, vals)
+                        flat = np.concatenate(
+                            [np.asarray(buf)[k, : np.asarray(cnt)[k]]
+                             for k in range(p)]
+                        )
+                        ok = np.array_equal(
+                            flat, np.sort(np.asarray(x).ravel())
+                        )
+                        measured = (t, ok)
+                    t, ok = measured
+                    if base is None:
+                        base = t  # per-array sort tail == the seed layout
+                    emit(
+                        "hotpath",
+                        {
+                            "mix": mix, "n": n, "p": p, "kv": kv,
+                            "tail": tail, "exchange": exchange,
+                            "a2a_ops": counts[f"{exchange}/kv{kv}"],
+                            "wall_s": round(t, 4),
+                            "speedup": round(base / max(t, 1e-9), 2),
+                            "complete": ok,
+                        },
+                    )
+
+
 def table_duplicate_handling_overhead(n, p=64):
     """§6.1: duplicate handling costs 3-6%; compare [U] vs all-duplicates."""
     fn, cfg = _sort_fn(p, n // p, algorithm="det", local_sort="lax")

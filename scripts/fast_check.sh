@@ -1,13 +1,26 @@
 #!/usr/bin/env bash
-# Quick verification loop (~40 s): the fast-marked tier-1 subset plus a
+# Quick verification loop (~3 min): the fast-marked tier-1 subset, a
 # one-batch capacity-planner smoke (fingerprint → segment-aware bound →
-# planned-tier fused sort → persisted history round-trip), so the planner
-# subsystem is exercised end-to-end even in the quick loop.
+# planned-tier fused sort → persisted history round-trip), and the perf
+# gate — the `hotpath` benchmark table regenerated from seeded inputs and
+# diffed against the committed baseline (benchmarks/baselines/): HLO
+# collective counts and other identity fields must match exactly, walls
+# within a generous shared-core tolerance. Set SKIP_BENCH=1 to skip the
+# perf gate (e.g. on a loaded machine).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -m fast -q
+
+if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
+  tmp="$(mktemp -d)"
+  trap 'rm -rf "$tmp"' EXIT
+  python -m benchmarks.run --tables hotpath --json "$tmp" > /dev/null
+  python scripts/bench_diff.py \
+    benchmarks/baselines/BENCH_hotpath.json "$tmp/BENCH_hotpath.json" \
+    --tol 0.6
+fi
 
 python - <<'EOF'
 import os, tempfile

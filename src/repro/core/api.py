@@ -33,6 +33,15 @@ variants, measured (not asserted) by the ``capacity`` benchmark table's
 ``retry_cost`` column. Per-tier attempt counters (:class:`TierStats`) feed
 the serving engine and the benchmark tables.
 
+The route stage's Ph5 exchange is *fused* by default
+(``SortConfig.exchange="fused"``): key + payload rows are byte-packed into
+one send buffer so each data superstep issues exactly ONE collective
+regardless of payload count, and the Ph6 ``merge="tree"`` tail is
+payload-generic — rank positions are computed once on the keys and every
+payload rides the same gather, so key-value callers (MoE dispatch, the
+segmented service composites) take the lg p rank-merge tail instead of a
+full re-sort (see ``core/routing.py`` and the ``hotpath`` benchmark table).
+
 Compiled callables for *both* runners live in a :class:`SortExecutor`
 registry keyed by ``(stage, runner, cfg, n_values[, mesh])`` — prepare
 callables additionally key on ``SortConfig.prepare_key()`` so every rung of

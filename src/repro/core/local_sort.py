@@ -32,5 +32,10 @@ def local_sort(
     if not values:
         (out,) = lax.sort((x,), num_keys=1, is_stable=True)
         return out, []
+    if all(v.ndim == 1 for v in values):
+        # 1-D payloads ride the one fused sorting network (stable, so the
+        # permutation is identical to the argsort+gather path)
+        out = lax.sort((x, *values), num_keys=1, is_stable=True)
+        return out[0], list(out[1:])
     perm = jnp.argsort(x, stable=True)
     return x[perm], [v[perm] for v in values]

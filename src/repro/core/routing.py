@@ -18,6 +18,23 @@ Three schedules (DESIGN.md §3):
 * ``ring`` — p-1 ``ppermute`` supersteps rotating an n/p-word visitor block;
   exact, memory O(n/p), the literal BSP superstep structure.
 
+Fused exchange (``SortConfig.exchange``)
+----------------------------------------
+The paper's Ph5 is ONE h-relation superstep; a key-value sort must not pay
+one collective per array. Under ``exchange="fused"`` (the default) the key
+and every payload row are bitcast to bytes and concatenated along the
+trailing dim into a single send buffer, so each data superstep issues
+exactly ONE collective regardless of payload count — one ``all_to_all`` for
+``a2a_dense`` (plus the tiny (p,)-word Ph4 count bookkeeping superstep), one
+``all_gather`` for ``allgather`` (plus the boundary bookkeeping gather), and
+one ``ppermute`` per ring superstep (visitor arrays AND the rotating
+boundary vector share the packed buffer). The buffer is unpacked (bitcast
+back) after delivery; packing is bit-exact, so the fused path is
+byte-identical to ``exchange="per_array"`` (the one-collective-per-array
+layout, kept as the measured baseline — see the ``hotpath`` benchmark
+table). The pack/unpack helpers (:func:`pack_bytes` / :func:`unpack_bytes`)
+are shared with the MoE EP dispatch (models/moe.py).
+
 All schedules preserve source order: the receive buffer is compacted by
 (source proc, local index), which is what makes the final merge stable and
 the §5.1.1 duplicate handling free.
@@ -47,11 +64,17 @@ route stage), not at Ph2: the driver reuses the tier-invariant
 Ph3b..Ph6 per rung — see ``api.SortExecutor``.
 
 Values (payload arrays with leading dim n_p) ride along with the keys — this
-is the key-value form used by MoE token dispatch (models/moe.py).
+is the key-value form used by MoE token dispatch (models/moe.py) and the
+segmented SortService composites. With ``merge="tree"`` they also ride the
+rank-merge tail (:func:`route_and_merge`): rank positions are computed once
+on the keys and applied to every payload, so key-value callers skip the
+``compact_rows`` scatter + full re-sort entirely.
 """
 from __future__ import annotations
 
 from typing import List, Sequence, Tuple
+
+import numpy as np
 
 import jax.numpy as jnp
 from jax import lax
@@ -63,6 +86,76 @@ from .types import SortConfig, sentinel_for
 
 def _pad_value_for(arr: jnp.ndarray) -> jnp.ndarray:
     return jnp.zeros((), arr.dtype)
+
+
+# ------------------------------------------------------ fused byte packing
+def _nbytes(dtype, trail) -> int:
+    return int(np.prod(trail, dtype=np.int64)) * jnp.dtype(dtype).itemsize
+
+
+def pack_bytes(
+    arrs: Sequence[jnp.ndarray], lead: int = 2
+) -> Tuple[jnp.ndarray, tuple]:
+    """Bitcast arrays sharing ``lead`` leading dims into ONE uint8 buffer.
+
+    Each (l0, .., l_{lead-1}, ...) array contributes its trailing dims as a
+    flat byte run along a new last axis; the concatenation is the single
+    send buffer of a fused collective. Returns ``(buffer, metas)`` where
+    ``metas`` is the static recipe :func:`unpack_bytes` inverts bit-exactly.
+    """
+    parts, metas = [], []
+    for a in arrs:
+        b = lax.bitcast_convert_type(a, jnp.uint8)
+        parts.append(b.reshape(a.shape[:lead] + (-1,)))
+        metas.append((a.dtype, a.shape[lead:]))
+    return jnp.concatenate(parts, axis=-1), tuple(metas)
+
+
+def unpack_bytes(
+    buf: jnp.ndarray, metas: tuple, lead: int = 2
+) -> List[jnp.ndarray]:
+    """Invert :func:`pack_bytes` after delivery (bit-exact)."""
+    out, off = [], 0
+    head = buf.shape[:lead]
+    for dtype, trail in metas:
+        dtype = jnp.dtype(dtype)
+        nb = _nbytes(dtype, trail)
+        b = buf[..., off : off + nb]
+        off += nb
+        shape = head + tuple(trail)
+        if dtype.itemsize > 1:
+            shape = shape + (dtype.itemsize,)
+        out.append(lax.bitcast_convert_type(b.reshape(shape), dtype))
+    return out
+
+
+def pack_bytes_flat(arrs: Sequence[jnp.ndarray]) -> Tuple[jnp.ndarray, tuple]:
+    """Pack arbitrarily-shaped arrays into one flat uint8 vector.
+
+    The ring schedule's visitor block (local run + payloads + the (p+1,)
+    boundary vector) has mixed shapes; a flat byte vector lets the whole
+    block rotate in ONE ``ppermute`` per superstep.
+    """
+    parts, metas = [], []
+    for a in arrs:
+        parts.append(lax.bitcast_convert_type(a, jnp.uint8).reshape(-1))
+        metas.append((a.dtype, a.shape))
+    return jnp.concatenate(parts), tuple(metas)
+
+
+def unpack_bytes_flat(vec: jnp.ndarray, metas: tuple) -> List[jnp.ndarray]:
+    """Invert :func:`pack_bytes_flat` (bit-exact)."""
+    out, off = [], 0
+    for dtype, shape in metas:
+        dtype = jnp.dtype(dtype)
+        nb = _nbytes(dtype, shape)
+        b = vec[off : off + nb]
+        off += nb
+        full = tuple(shape)
+        if dtype.itemsize > 1:
+            full = full + (dtype.itemsize,)
+        out.append(lax.bitcast_convert_type(b.reshape(full), dtype))
+    return out
 
 
 def send_counts(boundaries: jnp.ndarray) -> jnp.ndarray:
@@ -102,6 +195,14 @@ def _segment_rows(
     return rows
 
 
+def _all_to_all_rows(rows: List[jnp.ndarray], cfg: SortConfig, axis: str):
+    """Deliver (p, w, ...) rows: ONE fused all_to_all, or one per array."""
+    if cfg.exchange == "fused" and len(rows) > 1:
+        buf, metas = pack_bytes(rows, lead=2)
+        return unpack_bytes(lax.all_to_all(buf, axis, 0, 0), metas, lead=2)
+    return [lax.all_to_all(r, axis, 0, 0) for r in rows]
+
+
 def recv_rows(
     x_sorted: jnp.ndarray,
     boundaries: jnp.ndarray,
@@ -128,25 +229,29 @@ def recv_rows(
         )
         overflow = lax.pmax(over, axis) > 0
         rows = _segment_rows(arrs, boundaries, counts, pair_cap, sent)
-        rows = [lax.all_to_all(r, axis, 0, 0) for r in rows]
+        rows = _all_to_all_rows(rows, cfg, axis)
         return rows, rcounts, overflow
 
     if cfg.routing == "allgather":
         me = prim.proc_id(axis)
-        b_all = lax.all_gather(boundaries, axis)  # (p, p+1)
+        b_all = lax.all_gather(boundaries, axis)  # (p, p+1) — bookkeeping
         starts = b_all[:, me]
         rcounts = b_all[:, me + 1] - starts
         n_p = x_sorted.shape[0]
         t = jnp.arange(n_p)[None, :]
         idx = jnp.clip(starts[:, None] + t, 0, n_p - 1)
         valid = t < rcounts[:, None]
+        if cfg.exchange == "fused" and len(arrs) > 1:
+            buf, metas = pack_bytes(arrs, lead=1)
+            gathered = unpack_bytes(lax.all_gather(buf, axis), metas, lead=2)
+        else:
+            gathered = [lax.all_gather(a, axis) for a in arrs]  # (p, n_p, ...)
         rows = []
-        for i, a in enumerate(arrs):
-            a_all = lax.all_gather(a, axis)  # (p, n_p, ...)
+        for i, a_all in enumerate(gathered):
             g = jnp.take_along_axis(
                 a_all, idx.reshape(idx.shape + (1,) * (a_all.ndim - 2)), axis=1
             )
-            fill = sent if i == 0 else _pad_value_for(a)
+            fill = sent if i == 0 else _pad_value_for(arrs[i])
             mask = valid.reshape(valid.shape + (1,) * (g.ndim - 2))
             rows.append(jnp.where(mask, g, fill))
         over = (rcounts.sum() > cfg.n_max).astype(jnp.int32)
@@ -205,6 +310,19 @@ def route(
     return out[0], out[1:], total, overflow
 
 
+def _fit(arr: jnp.ndarray, cap: int, fill: jnp.ndarray) -> jnp.ndarray:
+    """Slice or pad-extend the merged run to the (cap, ...) result shape.
+
+    The tree tail's run length is p·width, which can undershoot ``n_max``
+    for a planner-shrunk pair capacity — pad with ``fill`` so every tier
+    returns the same result shape as the sort tail.
+    """
+    if arr.shape[0] >= cap:
+        return arr[:cap]
+    pad = jnp.full((cap - arr.shape[0],) + arr.shape[1:], fill, arr.dtype)
+    return jnp.concatenate([arr, pad], axis=0)
+
+
 def route_and_merge(
     x_sorted: jnp.ndarray,
     boundaries: jnp.ndarray,
@@ -217,13 +335,22 @@ def route_and_merge(
     Requires bucket i of the local run (``x_sorted[b[i]:b[i+1]]``) to be
     sorted, so each received row is a sorted run — which is what makes the
     ``merge=tree`` rank-merge path valid (``ran`` routes dest-grouped, not
-    key-sorted, rows and must keep its own sort-based tail).
+    key-sorted, rows and must keep its own sort-based tail). The tree tail
+    is payload-generic: received rows (key + payloads) go straight into
+    :func:`merge.merge_tree`, skipping the ``compact_rows`` scatter and the
+    full O(n_max·lg²n_max) re-sort of the sort tail.
     """
-    if cfg.merge == "tree" and not values and cfg.routing != "ring":
-        rows, rcounts, overflow = recv_rows(x_sorted, boundaries, cfg, axis, ())
-        merged, count = merge_mod.merge_tree(rows[0], rcounts)
-        merged = merged[: cfg.n_max]
-        return merged, [], jnp.minimum(count, cfg.n_max), overflow
+    if cfg.merge == "tree" and cfg.routing != "ring":
+        rows, rcounts, overflow = recv_rows(x_sorted, boundaries, cfg, axis, values)
+        merged, mvals, count = merge_mod.merge_tree(
+            rows[0], rcounts, values=rows[1:], backend=cfg.merge_backend,
+            cap=cfg.n_max,
+        )
+        cap = cfg.n_max
+        sent = sentinel_for(x_sorted.dtype)
+        merged = _fit(merged, cap, sent)
+        mvals = [_fit(v, cap, _pad_value_for(v)) for v in mvals]
+        return merged, mvals, jnp.minimum(count, cap), overflow
 
     buf, vbufs, count, overflow = route(x_sorted, boundaries, cfg, axis, values)
     merged, mvals = merge_mod.merge_by_sort(buf, vbufs)
@@ -231,7 +358,12 @@ def route_and_merge(
 
 
 def _route_ring(x_sorted, boundaries, cfg, axis, values, sent):
-    """p-1 ppermute supersteps; visitor block = one local run + boundaries."""
+    """p-1 ppermute supersteps; visitor block = one local run + boundaries.
+
+    Under ``exchange="fused"`` the whole visitor block (keys, payloads AND
+    the boundary vector) rotates as one packed byte vector — one collective
+    per superstep regardless of payload count.
+    """
     p, cap = cfg.p, cfg.n_max
     n_p = x_sorted.shape[0]
     me = prim.proc_id(axis)
@@ -261,6 +393,12 @@ def _route_ring(x_sorted, boundaries, cfg, axis, values, sent):
             buf.at[dst].set(a[idx], mode="drop") for buf, a in zip(bufs, vis_arrs)
         ]
         if r != p - 1:
-            vis_arrs = prim.ppermute_shift(vis_arrs, axis, 1, p=p)
-            vis_b = prim.ppermute_shift(vis_b, axis, 1, p=p)
+            if cfg.exchange == "fused":
+                vec, metas = pack_bytes_flat(list(vis_arrs) + [vis_b])
+                vec = prim.ppermute_shift(vec, axis, 1, p=p)
+                *vis_list, vis_b = unpack_bytes_flat(vec, metas)
+                vis_arrs = tuple(vis_list)
+            else:
+                vis_arrs = prim.ppermute_shift(vis_arrs, axis, 1, p=p)
+                vis_b = prim.ppermute_shift(vis_b, axis, 1, p=p)
     return bufs[0], bufs[1:], jnp.minimum(total, cap), overflow

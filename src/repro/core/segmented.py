@@ -24,7 +24,11 @@ through :func:`repro.core.api.bsp_sort_safe`, so it inherits the resumable
 prepare/route phase pipeline, the capacity-tier escalation ladder
 (whp → whp×2 → exact → allgather) and the :class:`SortExecutor` compile
 cache — one compiled program per ``(p, n_per_proc)`` shape serves every
-batch that packs to that shape.
+batch that packs to that shape. That includes the fused single-collective
+exchange and, via ``merge="tree"``, the payload-generic rank-merge tail:
+the int64 composites and their ``pos`` payload ride the lg p rank merges
+instead of a full re-sort (``ServiceConfig.merge`` exposes the knob one
+level up).
 
 Layout: ``pack_segments`` supports two lane layouts.
 

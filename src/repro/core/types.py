@@ -66,10 +66,19 @@ class SortConfig:
       the [·SQ]/quicksort variants), ``radix`` (counting-split — the [·SR]
       variants), or ``bitonic`` (Pallas in-VMEM sorting network).
     * ``merge`` — Ph6 method: ``sort`` (stable re-sort of the routed buffer)
-      or ``tree`` (lg p rounds of stable pairwise rank-merges).
+      or ``tree`` (lg p rounds of stable pairwise rank-merges; payload
+      arrays ride the same rank scatter, so key-value sorts take it too).
+    * ``merge_backend`` — Ph6 ``tree`` substrate: ``xla`` (jnp.searchsorted
+      ranks) or ``pallas`` (the ``kernels/searchsorted`` masked-count rank
+      kernel, and the ``kernels/merge_path`` partitioned network merge for
+      key-only pairs — interpret mode on CPU CI, real kernels on TPU).
     * ``routing`` — Ph5 schedule: ``a2a_dense`` (single all_to_all over a
       (p, pair_cap) buffer), ``allgather`` (reference; g·n volume), or
       ``ring`` (p-1 ppermute supersteps, n_per_proc-sized visitor buffer).
+    * ``exchange`` — Ph5 payload packing: ``fused`` packs key + payload rows
+      into ONE byte buffer so every data superstep issues exactly one
+      collective regardless of payload count; ``per_array`` keeps the
+      one-collective-per-array layout (comparison baseline).
     * ``sample_sort`` — Ph3 parallel sample sorting: ``gather`` (all_gather +
       fused local sort; optimal when p·s fits one core) or ``bitonic``
       (distributed Batcher compare-split, the paper's [BSI]-based scheme).
@@ -81,7 +90,12 @@ class SortConfig:
     omega: Optional[float] = None
     local_sort: str = "lax"
     merge: str = "sort"
+    # Ph6 tree-tail substrate: "xla" | "pallas" (see class docstring).
+    merge_backend: str = "xla"
     routing: str = "a2a_dense"
+    # Ph5 exchange layout: "fused" (one collective per data superstep) |
+    # "per_array" (one collective per array — comparison baseline).
+    exchange: str = "fused"
     sample_sort: str = "gather"
     capacity_factor: float = 1.0
     pad_align: int = 8
@@ -248,7 +262,8 @@ class SortConfig:
         equal ``prepare_key()`` therefore share one compiled prepare
         callable and one :class:`PreparedSort`, which is what lets the
         escalation driver re-enter only the route stage per rung.
-        ``merge`` (Ph6) is also normalised: it only affects the route stage
+        ``merge``/``merge_backend`` (Ph6) and ``exchange`` (the Ph5 payload
+        packing) are also normalised: they only affect the route stage
         but not the prepared state. ``omega`` is normalised for every
         algorithm except ``det`` (whose prepare includes the Ph3
         sample/splitter computation): iran/ran draw their sample inside the
@@ -264,6 +279,8 @@ class SortConfig:
             routing="a2a_dense",
             n_max_mode="bound",
             merge="sort",
+            merge_backend="xla",
+            exchange="fused",
             omega=self.omega if self.algorithm == "det" else None,
         )
 
@@ -278,6 +295,12 @@ class SortConfig:
             raise ValueError(f"unknown n_max_mode {self.n_max_mode!r}")
         if self.pair_capacity not in ("exact", "whp", "planned"):
             raise ValueError(f"unknown pair_capacity {self.pair_capacity!r}")
+        if self.merge not in ("sort", "tree"):
+            raise ValueError(f"unknown merge {self.merge!r}")
+        if self.exchange not in ("fused", "per_array"):
+            raise ValueError(f"unknown exchange {self.exchange!r}")
+        if self.merge_backend not in ("xla", "pallas"):
+            raise ValueError(f"unknown merge_backend {self.merge_backend!r}")
         if self.pair_capacity == "planned" and not self.pair_cap_override:
             raise ValueError("pair_capacity='planned' needs pair_cap_override")
 

@@ -1,5 +1,18 @@
-"""jit'd public wrapper for the splitter-rank kernel."""
+"""jit'd public wrappers for the splitter-rank kernel.
+
+Two entry points share the one masked-count kernel:
+
+* :func:`splitter_ranks` — tagged §5.1.1 bucket boundaries (Ph4);
+* :func:`rank_in` — untagged searchsorted ranks (left/right) of queries in a
+  sorted run, the rank computation of the Ph6 rank-merge tail
+  (``core/merge._rank_merge_two`` under ``merge_backend="pallas"``). The
+  side is encoded in the splitter *proc* tag: with ``me = 0`` a tag of -1
+  makes the lexicographic comparator strictly-less (side="left") and +1
+  makes it less-or-equal (side="right") — no kernel change needed.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -35,4 +48,34 @@ def splitter_ranks(x_sorted, split_keys, split_proc, split_idx, me):
     # pad elements carry idx ≥ n; a real splitter can still tag idx ≥ n only
     # on its own (proc, idx) record, never here — but a padded x equal to a
     # splitter key with me<proc would count. Clamp to n for safety.
+    return jnp.minimum(ranks, n)
+
+
+@functools.partial(jax.jit, static_argnames=("side",))
+def rank_in(data: jnp.ndarray, queries: jnp.ndarray, *, side: str = "left"):
+    """Rank of each query in a sorted (n,) run — jnp.searchsorted semantics.
+
+    side="left": #{i : data_i < q}; side="right": #{i : data_i <= q}.
+    Sentinel pads (appended to reach the block multiple) can only contribute
+    on side="right" for sentinel-valued queries; the final clamp to n undoes
+    that, matching searchsorted over the unpadded run exactly.
+    """
+    if side not in ("left", "right"):
+        raise ValueError(f"unknown side {side!r}")
+    n = data.shape[0]
+    block = min(BLOCK, round_up(n, 128))
+    npad = round_up(n, block)
+    sent = sentinel_for(data.dtype)
+    xp = jnp.pad(data, (0, npad - n), constant_values=sent)
+    s = queries.shape[0]
+    tag = jnp.full((s,), 1 if side == "right" else -1, jnp.int32)
+    ranks = kernel.splitter_ranks(
+        xp,
+        queries,
+        tag,
+        jnp.zeros((s,), jnp.int32),
+        jnp.asarray(0, jnp.int32),
+        block=block,
+        interpret=_interpret(),
+    )
     return jnp.minimum(ranks, n)

@@ -10,7 +10,9 @@ stability guarantee doing real work. Two paths:
   sharded over the ``model`` axis. Inside a ``shard_map`` over
   (data-like axes × model), each shard stable-sorts its token records by
   expert id (the paper's Ph2/step-9 "set formation"), computes per-dest
-  segment boundaries, and routes through ``lax.all_to_all`` with a
+  segment boundaries, and routes through ONE ``lax.all_to_all`` (expert ids
+  and token rows byte-packed into a single send buffer — the fused
+  h-relation of ``core/routing.pack_bytes``) with a
   capacity = (tokens/shard)·cf — the Claim 5.1-style w.h.p. bound with
   overflow *detected* and surfaced (``aux['overflow']``), never silently
   dropped. The reverse all_to_all + stable unsort is the combine.
@@ -43,6 +45,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import TierStats
+from repro.core import routing
 from repro.core.primitives import shard_map
 from repro.models.layers import _dense, dtype_of
 
@@ -236,15 +239,19 @@ def moe_ep(
             lax.pmax(jnp.any(counts > pair_cap).astype(jnp.int32), all_axes) > 0
         )
 
-        # paper steps 10-11: segment rows + one all_to_all (keys + payload)
+        # paper steps 10-11: segment rows + ONE all_to_all (keys + payload
+        # byte-packed into a single send buffer — the fused h-relation, same
+        # helpers as core/routing's Ph5)
         tix = jnp.arange(pair_cap)[None, :]
         gidx = jnp.clip(bounds[:-1][:, None] + tix, 0, n - 1)
         valid = tix < counts[:, None]
         rows_e = jnp.where(valid, sorted_e[gidx], -1)  # (p, pair_cap)
         sorted_tok = x2d[order // k]  # record i ↔ token order[i]//k
         rows_x = jnp.where(valid[..., None], sorted_tok[gidx], 0).astype(xl.dtype)
-        recv_e = lax.all_to_all(rows_e, axis, 0, 0)
-        recv_x = lax.all_to_all(rows_x, axis, 0, 0)
+        fused, metas = routing.pack_bytes([rows_e, rows_x], lead=2)
+        recv_e, recv_x = routing.unpack_bytes(
+            lax.all_to_all(fused, axis, 0, 0), metas, lead=2
+        )
 
         # local expert compute (masked over e_loc experts; e_loc ≤ 2 in all
         # assigned configs — bounded FLOP inflation, see DESIGN.md §4)

@@ -21,6 +21,16 @@ History persists as JSON (``path=``), so a restarted service starts where
 traffic left off: the acceptance test shows a fresh planner re-loading a
 fault-ridden bucket's history starts it at the promoted rung.
 
+Writes are atomic (tmp file + rename) and **merge-on-save**: before
+writing, :meth:`save` re-reads the current file and folds in what other
+processes learned since this planner loaded — union of buckets, the
+*higher* rung on conflict (the capacity-safe direction), and the other
+side's counter deltas (disk minus the snapshot taken at load) accumulated
+onto same-rung entries. Several services sharing one history path
+therefore pool their traffic instead of last-write-wins clobbering each
+other; the residual race window (read → rename without a lock) can lose
+at most one save's worth of *observations*, never whole buckets.
+
 The planner also exposes the generic primitives (:meth:`rung_for` /
 :meth:`observe`) that ``bsp_sort_safe`` and ``moe_ep_safe`` use as an
 optional policy: the same bucket→rung learning over their own capacity
@@ -93,6 +103,9 @@ class CapacityPlanner:
         self.promotions = 0
         self.probes = 0
         self._dirty = False  # unsaved observations (see save_if_dirty)
+        #: disk snapshot at load/last save — the merge-on-save baseline for
+        #: computing what OTHER processes observed since (see save)
+        self._base: Dict[str, Dict[str, int]] = {}
         if path is not None and os.path.exists(path):
             # persistence is telemetry, not dispatch (mirrors the warn-only
             # save path): a corrupt/truncated/stale-format history must not
@@ -104,6 +117,7 @@ class CapacityPlanner:
                 warnings.warn(f"planner history at {path!r} unusable ({e}); "
                               "starting fresh")
                 self.history = {}
+        self._base = {k: dict(v) for k, v in self.history.items()}
 
     # ------------------------------------------------------------ learning
     def _entry(self, bucket: str) -> Dict[str, int]:
@@ -217,11 +231,39 @@ class CapacityPlanner:
             for k, v in data["buckets"].items()
         }
 
+    def _merge_disk(self, path: str) -> None:
+        """Fold another process's on-disk observations into ``history``.
+
+        Disk buckets unknown to us are adopted; on a shared bucket the
+        higher rung wins (capacity-safe), and when rungs agree the disk
+        side's counter *deltas* since our load snapshot are accumulated (so
+        observations this planner already loaded are not double-counted).
+        """
+        try:
+            with open(path) as f:
+                other = CapacityPlanner()
+                other.load_json(f.read())
+        except (OSError, ValueError, KeyError, TypeError):
+            return  # absent/corrupt: nothing to merge, overwrite cleanly
+        for bucket, disk in other.history.items():
+            own = self.history.get(bucket)
+            if own is None:
+                self.history[bucket] = dict(disk)
+                continue
+            if disk["rung"] > own["rung"]:
+                self.history[bucket] = dict(disk)
+            elif disk["rung"] == own["rung"]:
+                base = self._base.get(bucket, {})
+                for f_ in ("attempts", "faults", "clean"):
+                    own[f_] += max(0, disk[f_] - base.get(f_, 0))
+
     def save(self, path: Optional[str] = None) -> str:
-        """Atomically write the history JSON (tmp file + rename)."""
+        """Atomically write the history JSON (tmp + rename), merge-on-save."""
         path = path or self.path
         if path is None:
             raise ValueError("no path configured for planner persistence")
+        if os.path.exists(path):
+            self._merge_disk(path)
         d = os.path.dirname(os.path.abspath(path))
         os.makedirs(d, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".planner")
@@ -234,6 +276,7 @@ class CapacityPlanner:
                 os.unlink(tmp)
             raise
         self._dirty = False
+        self._base = {k: dict(v) for k, v in self.history.items()}
         return path
 
     def save_if_dirty(self) -> bool:

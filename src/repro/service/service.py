@@ -70,6 +70,10 @@ class ServiceConfig:
     # "whp"/"exact" pins the starting tier for every batch.
     pair_capacity: str = "auto"
     local_sort: str = "lax"
+    # Ph6 tail of the fused sort: "sort" (stable re-sort) or "tree" (the
+    # payload-generic rank-merge tail — the int64 composites and their pos
+    # payload ride the lg p rank merges instead of a full re-sort).
+    merge: str = "sort"
     max_batch_keys: int = 1 << 16  # batch former's packing cap
     min_n_per_proc: int = 8
     seed: int = 0
@@ -243,6 +247,7 @@ class SortService:
                     packed,
                     algorithm=self.cfg.algorithm,
                     local_sort=self.cfg.local_sort,
+                    merge=self.cfg.merge,
                     seed=self.cfg.seed,
                     stats=batch_stats,
                     executor=self.executor,

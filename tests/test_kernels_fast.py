@@ -54,6 +54,34 @@ def test_merge_path_smoke(na, nb):
     assert np.array_equal(mops.merge(a, b), mref.merge(a, b))
 
 
+@pytest.mark.parametrize("na,nb", [(100, 300), (1500, 2500), (64, 64)])
+def test_merge_partitioned_smoke(na, nb):
+    """Partitioned merge-path variant == whole-row oracle, widths straddling
+    the TILE boundary and including sentinel-valued real keys."""
+    rng = np.random.default_rng(5)
+    w = max(na, nb)
+    sent = np.iinfo(np.int32).max
+    a = np.sort(rng.integers(0, 1000, (3, w)).astype(np.int32), axis=-1)
+    b = np.sort(rng.integers(0, 1000, (3, w)).astype(np.int32), axis=-1)
+    a[:, na:] = sent  # pad tails the way the routing rows arrive
+    b[:, nb:] = sent
+    b[1, nb - 1 :] = sent  # a real key equal to the sentinel
+    got = mops.merge_partitioned(jnp.asarray(a), jnp.asarray(b))
+    want = np.sort(np.concatenate([a, b], axis=-1), axis=-1)
+    assert np.array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("side", ["left", "right"])
+@pytest.mark.parametrize("n,q", [(256, 256), (1000, 100), (5000, 2048)])
+def test_rank_in_matches_searchsorted(side, n, q):
+    rng = np.random.default_rng(6)
+    data = jnp.sort(jnp.asarray(rng.integers(0, 50, n).astype(np.int32)))
+    queries = jnp.asarray(rng.integers(-5, 55, q).astype(np.int32))
+    got = sops.rank_in(data, queries, side=side)
+    want = jnp.searchsorted(data, queries, side=side)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
 @pytest.mark.parametrize("n,s", [(256, 7), (1000, 31)])
 def test_searchsorted_smoke(n, s):
     rng = np.random.default_rng(4)

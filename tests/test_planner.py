@@ -429,6 +429,50 @@ def test_corrupt_history_warns_and_starts_fresh(tmp_path):
         CapacityPlanner(path=str(path))
 
 
+def test_planner_merge_on_save_pools_concurrent_histories(tmp_path):
+    """Two planners sharing one history path must not last-write-wins
+    clobber each other: a save folds in buckets the other process wrote,
+    keeps the higher (capacity-safe) rung on conflict, and accumulates the
+    other side's counter deltas without double-counting what was loaded."""
+    path = str(tmp_path / "history.json")
+    a = CapacityPlanner(path=path, min_attempts=4, fault_target=0.05)
+    b = CapacityPlanner(path=path)  # loaded before A wrote anything
+
+    for _ in range(5):
+        a.observe("hot", True)  # promotes hot to rung 1
+    assert a.history["hot"]["rung"] == 1
+    a.save()
+
+    b.observe("cold", False)
+    b.save()  # must NOT erase A's promoted "hot" bucket
+    merged = CapacityPlanner(path=path)
+    assert merged.history["hot"]["rung"] == 1, merged.history
+    assert merged.history["cold"]["attempts"] == 1, merged.history
+
+    # same-rung counter pooling without double-counting: two fresh planners
+    # each observe the shared bucket twice more and save in turn
+    c = CapacityPlanner(path=path)
+    d = CapacityPlanner(path=path)
+    for _ in range(2):
+        c.observe("cold", False)
+        d.observe("cold", False)
+    c.save()
+    d.save()  # folds C's delta (2) onto its own view (1 loaded + 2 new)
+    assert CapacityPlanner(path=path).history["cold"]["attempts"] == 5
+
+    # rung conflict: the higher rung wins even if the lower saves last
+    e = CapacityPlanner(path=path, min_attempts=2, fault_target=0.05)
+    f = CapacityPlanner(path=path)
+    for _ in range(3):
+        e.observe("cold", True)
+    promoted = e.history["cold"]["rung"]
+    assert promoted >= 1
+    e.save()
+    f.observe("cold", False)  # f still thinks cold is rung 0
+    f.save()
+    assert CapacityPlanner(path=path).history["cold"]["rung"] == promoted
+
+
 def test_service_rejects_unsupported_tier_pin():
     """A 'planned' pin has no per-batch bound to run with — it must be
     rejected at construction, not raise inside flush where the crash-safe

@@ -1,10 +1,14 @@
 """Benchmark utilities: timing, calibration, and table rendering.
 
 Methodology mirrors the paper's §6: wall-clock timing (bsp_time analogue =
-perf_counter around block_until_ready), averages over ≥4 runs after one
-warmup, and the paper's calibration of the comparison rate (its T3D
-quicksort did 1M keys in ~3 s ⇒ 7 cmp/µs; we measure the same constant for
-this CPU + XLA's sort).
+perf_counter around block_until_ready), ≥4 runs after one warmup, and the
+paper's calibration of the comparison rate (its T3D quicksort did 1M keys
+in ~3 s ⇒ 7 cmp/µs; we measure the same constant for this CPU + XLA's
+sort). One deliberate departure: the paper *averages* its runs on a
+dedicated T3D; we report the *minimum*, the stable estimator on a shared
+machine where CPU steal is additive one-sided noise (same rationale as
+python -m timeit) — the committed baselines gate on these walls, and a
+mean lets one stalled repeat fail the diff.
 
 The Cray T3D is simulated: p processors = a vmapped axis on one CPU core,
 so measured "parallel" time is total-work time. We therefore report
@@ -26,7 +30,7 @@ import numpy as np
 
 from repro.core import BSPMachine, CRAY_T3D, SortConfig, predict
 
-#: paper §6 averages ≥4 experiments; default 2 keeps the harness's default
+#: paper §6 runs ≥4 experiments; default 2 keeps the harness's default
 #: single-core run short — raise via benchmarks.run --full for paper fidelity.
 REPEATS = 2
 
@@ -40,7 +44,7 @@ def timeit(fn: Callable, *args, repeats: int = REPEATS) -> float:
         out = fn(*args)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    return float(np.mean(ts))
+    return float(np.min(ts))
 
 
 _seq_cache: Dict[int, float] = {}

@@ -76,6 +76,10 @@ def main() -> None:
        total=M // 16 if not args.full else M, p=8 if not args.full else 16)
     go("planner", tables.table_planner, n_requests=64,
        total=M // 16 if not args.full else M, p=8 if not args.full else 16)
+    go("soak", tables.table_service_soak,
+       n_requests=48 if not args.full else 128,
+       total=M // 32 if not args.full else M // 4,
+       arrival_hz=400.0 if not args.full else 800.0)
 
     if args.json:
         for path in write_json(args.json):

@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
-# Quick verification loop (~3 min): the fast-marked tier-1 subset, a
+# Quick verification loop (~4 min): the fast-marked tier-1 subset, a
 # one-batch capacity-planner smoke (fingerprint → segment-aware bound →
 # planned-tier fused sort → persisted history round-trip), and the perf
-# gate — the `hotpath` benchmark table regenerated from seeded inputs and
-# diffed against the committed baseline (benchmarks/baselines/): HLO
-# collective counts and other identity fields must match exactly, walls
-# within a generous shared-core tolerance. Set SKIP_BENCH=1 to skip the
-# perf gate (e.g. on a loaded machine).
+# gates — the `hotpath` and `soak` benchmark tables regenerated from
+# seeded inputs and diffed against the committed baselines
+# (benchmarks/baselines/): HLO collective counts, pipeline saturation
+# (in_flight_peak/overlapped) and other identity fields must match
+# exactly, walls within a generous shared-core tolerance and the soak
+# p99 under bench_diff's looser percentile gate. Set SKIP_BENCH=1 to
+# skip the perf gates (e.g. on a loaded machine).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -16,9 +18,12 @@ python -m pytest -m fast -q
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   tmp="$(mktemp -d)"
   trap 'rm -rf "$tmp"' EXIT
-  python -m benchmarks.run --tables hotpath --json "$tmp" > /dev/null
+  python -m benchmarks.run --tables hotpath,soak --json "$tmp" > /dev/null
   python scripts/bench_diff.py \
     benchmarks/baselines/BENCH_hotpath.json "$tmp/BENCH_hotpath.json" \
+    --tol 0.6
+  python scripts/bench_diff.py \
+    benchmarks/baselines/BENCH_soak.json "$tmp/BENCH_soak.json" \
     --tol 0.6
 fi
 

@@ -8,21 +8,30 @@ Public API:
     bsp_sort_safe / _sharded_safe — overflow-safe drivers: prepare once, then
                                     re-enter only the route stage per rung of
                                     the capacity ladder; no key ever dropped
+    bsp_sort_safe_launch,
+    InFlightSort                  — the drivers' launch/wait split: dispatch
+                                    rung 0 and return (JAX async dispatch);
+                                    wait() walks the remaining rungs — the
+                                    service's in-flight batch pipelining
     SortExecutor                  — compiled-callable registry (both runners)
     TierStats                     — per-tier retry counters for the drivers
     phase_fns                     — per-phase callables (paper Tables 4-7)
     predict, BSPMachine, CRAY_T3D — BSP (p, L, g) cost model (§1.1, Props 5.1/5.3)
     datagen                       — §6.3 benchmark input distributions (+ zipf)
     pack_segments, sort_segments,
-    segmented_sort_safe           — segmented sort: many requests fused into
+    segmented_sort_safe,
+    segmented_sort_launch         — segmented sort: many requests fused into
                                     one (segment_id, key)-tagged BSP sort
-                                    (the repro.service layer's engine)
+                                    (the repro.service layer's engine);
+                                    _launch is its non-blocking form
 """
 from .api import (
+    InFlightSort,
     SortExecutor,
     TierStats,
     bsp_sort,
     bsp_sort_safe,
+    bsp_sort_safe_launch,
     bsp_sort_sharded,
     bsp_sort_sharded_safe,
     default_executor,
@@ -34,9 +43,11 @@ from .api import (
 )
 from .bsp import BSPMachine, CRAY_T3D, Prediction, predict, theoretical_max_imbalance
 from .segmented import (
+    InFlightSegmentedSort,
     PackedSegments,
     SegmentedResult,
     pack_segments,
+    segmented_sort_launch,
     segmented_sort_safe,
     sort_segments,
 )
@@ -48,6 +59,8 @@ __all__ = [
     "AXIS",
     "BSPMachine",
     "CRAY_T3D",
+    "InFlightSegmentedSort",
+    "InFlightSort",
     "PackedSegments",
     "Prediction",
     "PreparedSort",
@@ -58,6 +71,7 @@ __all__ = [
     "TierStats",
     "bsp_sort",
     "bsp_sort_safe",
+    "bsp_sort_safe_launch",
     "bsp_sort_sharded",
     "bsp_sort_sharded_safe",
     "datagen",
@@ -66,6 +80,7 @@ __all__ = [
     "pack_segments",
     "phase_fns",
     "predict",
+    "segmented_sort_launch",
     "segmented_sort_safe",
     "sentinel_for",
     "sort_segments",

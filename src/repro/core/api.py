@@ -87,6 +87,7 @@ bucketing (``data/pipeline.py``) are service consumers.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -481,25 +482,172 @@ def default_executor() -> SortExecutor:
     return _EXECUTOR
 
 
+class InFlightSort:
+    """A *launched* overflow-safe sort whose completion has not been awaited.
+
+    Construction dispatches the first ladder rung's route stage to the
+    device queue and returns immediately — JAX's async dispatch means the
+    host is free while the device executes, so a caller can plan/pack/launch
+    the *next* batch before blocking here. :meth:`wait` is the only sync
+    point: it reads the rung's overflow flag (the escalation decision) and,
+    on a fault, launches the next rung — the same escalation loop
+    ``bsp_sort_safe`` always ran, split at the host-sync boundary.
+
+    The rng is folded per tier so a randomized retry is an independent trial
+    (re-drawing the failed splitter sample would correlate failures).
+    ``run_tier(tier_cfg, tier_rng) -> (SortResult, value_bufs)``. ``ladder``
+    is (a suffix of) ``SortConfig.tier_ladder()`` — a planner policy may
+    have sliced the doomed cheap rungs off the front. ``scope`` is a context
+    factory entered around every device launch (the segmented service needs
+    ``enable_x64`` re-entered when escalation re-launches from ``wait``);
+    ``on_complete(stats)`` fires once, after the winning rung — completion-
+    callback hooks (planner feedback) ride it instead of blocking the
+    launcher. ``wait`` is idempotent: the result is cached.
+    """
+
+    def __init__(
+        self,
+        ladder: tuple,
+        rng: jax.Array,
+        stats: Optional[TierStats],
+        run_tier: Callable,
+        *,
+        scope: Optional[Callable] = None,
+        on_complete: Optional[Callable] = None,
+    ) -> None:
+        self.stats = stats if stats is not None else TierStats()
+        self._ladder = ladder
+        self._rng = rng
+        self._run_tier = run_tier
+        self._scope = scope if scope is not None else contextlib.nullcontext
+        self._on_complete = on_complete
+        self._out: Optional[Tuple[SortResult, List[jnp.ndarray], TierStats]] = None
+        self._i = 0
+        with self._scope():
+            self._pending = run_tier(ladder[0][1], jax.random.fold_in(rng, 0))
+
+    def done(self) -> bool:
+        """Whether :meth:`wait` has already resolved (never blocks)."""
+        return self._out is not None
+
+    def wait(self) -> Tuple[SortResult, List[jnp.ndarray], TierStats]:
+        """Block until a rung's overflow flag is clean; escalate on faults."""
+        if self._out is not None:
+            return self._out
+        while True:
+            res, vbufs = self._pending
+            tier = self._ladder[self._i][0]
+            ok = not bool(res.overflow)  # host sync: the retry decision point
+            self.stats.record(tier, ok)
+            if ok:
+                self._out = (res, vbufs, self.stats)
+                if self._on_complete is not None:
+                    self._on_complete(self.stats)
+                return self._out
+            self._i += 1
+            if self._i >= len(self._ladder):
+                raise RuntimeError(
+                    "capacity escalation exhausted — unreachable: the "
+                    "allgather/full tier cannot overflow (ladder: "
+                    f"{[t for t, _ in self._ladder]})"
+                )
+            with self._scope():
+                self._pending = self._run_tier(
+                    self._ladder[self._i][1],
+                    jax.random.fold_in(self._rng, self._i),
+                )
+
+
 def _escalate(
     ladder: tuple, rng: jax.Array, stats: Optional[TierStats], run_tier: Callable
 ) -> Tuple[SortResult, List[jnp.ndarray], TierStats]:
-    """Shared escalation loop: run each ladder rung until the overflow flag
-    is clean. The rng is folded per tier so a randomized retry is an
-    independent trial (re-drawing the failed splitter sample would correlate
-    failures). ``run_tier(tier_cfg, tier_rng) -> (SortResult, value_bufs)``.
-    ``ladder`` is (a suffix of) ``SortConfig.tier_ladder()`` — a planner
-    policy may have sliced the doomed cheap rungs off the front."""
+    """Blocking escalation: launch rung 0 and wait through the ladder."""
+    return InFlightSort(ladder, rng, stats, run_tier).wait()
+
+
+def bsp_sort_safe_launch(
+    x: jnp.ndarray,
+    cfg: Optional[SortConfig] = None,
+    *,
+    values: Sequence[jnp.ndarray] = (),
+    rng: Optional[jax.Array] = None,
+    stats: Optional[TierStats] = None,
+    executor: Optional[SortExecutor] = None,
+    resume: bool = True,
+    planner=None,
+    scope: Optional[Callable] = None,
+    **overrides,
+) -> InFlightSort:
+    """Launch an overflow-safe sort without awaiting it.
+
+    ``prepare`` plus the first ladder rung's ``route`` are dispatched to the
+    device queue and an :class:`InFlightSort` is returned immediately —
+    the caller overlaps host work (planning the next batch) with the device
+    execution and blocks only at :meth:`InFlightSort.wait`. The async
+    service dispatcher (``repro.service.dispatch``) is the primary consumer.
+
+    ``planner`` (a :class:`repro.planner.CapacityPlanner`) is an optional
+    traffic-learned policy: repeated sorts of the same shape/config that
+    keep faulting their cheap rung start one rung up next time (and probe
+    back down after a clean streak) — the ladder above the learned start is
+    unchanged, so safety is untouched. Its outcome feedback runs as a
+    completion callback on ``wait``. ``scope`` is a context factory entered
+    around every device launch (``enable_x64`` for int64 composites).
+    """
+    p, n_p = x.shape
+    if cfg is None:
+        cfg = SortConfig(p=p, n_per_proc=n_p, **overrides)
+    if rng is None:
+        rng = jax.random.key(cfg.seed)
+    ex = executor if executor is not None else _EXECUTOR
+    nv = len(values)
+
+    ladder = cfg.tier_ladder()
+    bucket = None
+    if planner is not None and len(ladder) > 1:
+        bucket = (
+            f"sort/{cfg.algorithm}/p{p}/npp{n_p}/{cfg.pair_capacity}"
+        )
+        ladder = ladder[planner.rung_for(bucket, len(ladder)) :]
     stats = stats if stats is not None else TierStats()
-    for i, (tier, tier_cfg) in enumerate(ladder):
-        res, vbufs = run_tier(tier_cfg, jax.random.fold_in(rng, i))
-        ok = not bool(res.overflow)  # host sync: the retry decision point
-        stats.record(tier, ok)
-        if ok:
-            return res, vbufs, stats
-    raise RuntimeError(
-        "capacity escalation exhausted — unreachable: the allgather/full "
-        f"tier cannot overflow (ladder: {[t for t, _ in ladder]})"
+    retries_before = stats.retries
+
+    on_complete = None
+    if bucket is not None:
+        n_rungs = len(cfg.tier_ladder())
+
+        def on_complete(st: TierStats, _bucket=bucket) -> None:
+            planner.observe(_bucket, st.retries > retries_before, n_rungs)
+
+    if not resume:
+
+        def run_tier(tier_cfg, tier_rng):
+            fn = ex.sort_vmap(tier_cfg, nv)
+            buf, vbufs, count, overflow = fn(
+                x, jax.random.key_data(tier_rng), *values
+            )
+            return SortResult(buf=buf, count=count, overflow=overflow.any()), list(
+                vbufs
+            )
+
+    else:
+        # Ph2 (+ det Ph3), exactly once — inside the scope: the prepare
+        # stage consumes the (possibly int64) input directly
+        if scope is not None:
+            with scope():
+                prep = ex.prepare_vmap(cfg, nv)(x, *values)
+        else:
+            prep = ex.prepare_vmap(cfg, nv)(x, *values)
+
+        def run_tier(tier_cfg, tier_rng):
+            fn = ex.route_vmap(tier_cfg, nv)
+            buf, vbufs, count, overflow = fn(prep, jax.random.key_data(tier_rng))
+            return SortResult(buf=buf, count=count, overflow=overflow.any()), list(
+                vbufs
+            )
+
+    return InFlightSort(
+        ladder, rng, stats, run_tier, scope=scope, on_complete=on_complete
     )
 
 
@@ -523,58 +671,20 @@ def bsp_sort_safe(
     regardless of skew or adversarial placement. ``resume=False`` falls back
     to re-running the whole sort per rung (the pre-pipeline behaviour, kept
     for the ``retry_cost`` benchmark comparison). Returns
-    ``(result, value_bufs, stats)``.
-
-    ``planner`` (a :class:`repro.planner.CapacityPlanner`) is an optional
-    traffic-learned policy: repeated sorts of the same shape/config that
-    keep faulting their cheap rung start one rung up next time (and probe
-    back down after a clean streak) — the ladder above the learned start is
-    unchanged, so safety is untouched.
+    ``(result, value_bufs, stats)``. The blocking form of
+    :func:`bsp_sort_safe_launch` — launch + immediate wait, byte-identical.
     """
-    p, n_p = x.shape
-    if cfg is None:
-        cfg = SortConfig(p=p, n_per_proc=n_p, **overrides)
-    if rng is None:
-        rng = jax.random.key(cfg.seed)
-    ex = executor if executor is not None else _EXECUTOR
-    nv = len(values)
-
-    ladder = cfg.tier_ladder()
-    bucket = None
-    if planner is not None and len(ladder) > 1:
-        bucket = (
-            f"sort/{cfg.algorithm}/p{p}/npp{n_p}/{cfg.pair_capacity}"
-        )
-        ladder = ladder[planner.rung_for(bucket, len(ladder)) :]
-    stats = stats if stats is not None else TierStats()
-    retries_before = stats.retries
-
-    if not resume:
-
-        def run_tier(tier_cfg, tier_rng):
-            fn = ex.sort_vmap(tier_cfg, nv)
-            buf, vbufs, count, overflow = fn(
-                x, jax.random.key_data(tier_rng), *values
-            )
-            return SortResult(buf=buf, count=count, overflow=overflow.any()), list(
-                vbufs
-            )
-
-    else:
-        # Ph2 (+ det Ph3), exactly once
-        prep = ex.prepare_vmap(cfg, nv)(x, *values)
-
-        def run_tier(tier_cfg, tier_rng):
-            fn = ex.route_vmap(tier_cfg, nv)
-            buf, vbufs, count, overflow = fn(prep, jax.random.key_data(tier_rng))
-            return SortResult(buf=buf, count=count, overflow=overflow.any()), list(
-                vbufs
-            )
-
-    out = _escalate(ladder, rng, stats, run_tier)
-    if bucket is not None:
-        planner.observe(bucket, stats.retries > retries_before, len(cfg.tier_ladder()))
-    return out
+    return bsp_sort_safe_launch(
+        x,
+        cfg,
+        values=values,
+        rng=rng,
+        stats=stats,
+        executor=executor,
+        resume=resume,
+        planner=planner,
+        **overrides,
+    ).wait()
 
 
 def bsp_sort_sharded_safe(

@@ -71,7 +71,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
-from .api import SortExecutor, TierStats, bsp_sort_safe, gathered_output
+from .api import (
+    InFlightSort,
+    SortExecutor,
+    TierStats,
+    bsp_sort_safe_launch,
+    gathered_output,
+)
 from .types import SortConfig
 
 #: bits of the composite holding the (biased) key; segment id sits above.
@@ -280,7 +286,30 @@ class SegmentedResult:
     n_per_proc: int  # the pow2 bucket this batch compiled under
 
 
-def segmented_sort_safe(
+@dataclasses.dataclass
+class InFlightSegmentedSort:
+    """A dispatched fused batch awaiting completion.
+
+    Host-side packing is done and the sort's first ladder rung is in the
+    device queue (:class:`repro.core.api.InFlightSort`); :meth:`wait` is the
+    only sync point — it escalates through the remaining capacity rungs if
+    the launched rung faulted, then unpacks per segment. The async service
+    dispatcher launches batch k+1's packing/planning while batch k sits
+    here.
+    """
+
+    packed: PackedSegments
+    flight: InFlightSort
+
+    def done(self) -> bool:
+        return self.flight.done()
+
+    def wait(self) -> SegmentedResult:
+        res, vbufs, stats = self.flight.wait()
+        return _unpack_result(self.packed, res, vbufs, stats)
+
+
+def segmented_sort_launch(
     packed: PackedSegments,
     cfg: Optional[SortConfig] = None,
     *,
@@ -288,13 +317,13 @@ def segmented_sort_safe(
     stats: Optional[TierStats] = None,
     executor: Optional[SortExecutor] = None,
     **overrides,
-) -> SegmentedResult:
-    """Sort every packed segment in one overflow-safe BSP sort.
+) -> InFlightSegmentedSort:
+    """Launch one fused overflow-safe sort without awaiting it.
 
-    The composite keys run through :func:`bsp_sort_safe` (prepare once,
-    re-enter route per capacity-ladder rung), with the within-segment index
-    as payload. Default config: randomized oversampling starting at the
-    *exact* pair capacity — the safe choice for the default *contiguous*
+    The composite keys run through :func:`bsp_sort_safe_launch` (prepare
+    once, re-enter route per capacity-ladder rung), with the within-segment
+    index as payload. Default config: randomized oversampling starting at
+    the *exact* pair capacity — the safe choice for the default *contiguous*
     packing, whose value-clustered lanes structurally violate the whp
     per-pair bound. Batches packed with ``layout="striped"`` can instead
     pass ``pair_capacity="planned"`` with the capacity planner's
@@ -312,27 +341,50 @@ def segmented_sort_safe(
     assert (cfg.p, cfg.n_per_proc) == (packed.p, packed.n_per_proc)
     stats = stats if stats is not None else TierStats()
     # Multi-segment composites need all 64 bits; the repo otherwise runs
-    # with JAX's default 32-bit mode, so x64 is enabled only around this
-    # sort. Every call (not just the first trace) must sit inside the
-    # scope — input canonicalization is per-call, and a 32-bit call would
-    # truncate the segment tags and retrace the executor's cached
-    # callables. Single-segment batches carry raw int32 keys and stay in
-    # native 32-bit mode.
+    # with JAX's default 32-bit mode, so x64 is enabled only around the
+    # sort's device entries. Every launch (not just the first trace) must
+    # sit inside the scope — input canonicalization is per-call, and a
+    # 32-bit call would truncate the segment tags and retrace the
+    # executor's cached callables — so the scope *factory* travels with the
+    # in-flight sort and is re-entered when ``wait`` escalates. Single-
+    # segment batches carry raw int32 keys and stay in native 32-bit mode.
     scope = (
-        enable_x64()
+        enable_x64
         if packed.comp.dtype == np.int64
-        else contextlib.nullcontext()
+        else contextlib.nullcontext
     )
-    with scope:
-        res, vbufs, stats = bsp_sort_safe(
-            jnp.asarray(packed.comp),
-            cfg,
-            values=(jnp.asarray(packed.pos),),
-            rng=rng,
-            stats=stats,
-            executor=executor,
-        )
-    return _unpack_result(packed, res, vbufs, stats)
+    with scope():
+        x = jnp.asarray(packed.comp)
+        pos = jnp.asarray(packed.pos)
+    flight = bsp_sort_safe_launch(
+        x,
+        cfg,
+        values=(pos,),
+        rng=rng,
+        stats=stats,
+        executor=executor,
+        scope=scope,
+    )
+    return InFlightSegmentedSort(packed=packed, flight=flight)
+
+
+def segmented_sort_safe(
+    packed: PackedSegments,
+    cfg: Optional[SortConfig] = None,
+    *,
+    rng: Optional[jax.Array] = None,
+    stats: Optional[TierStats] = None,
+    executor: Optional[SortExecutor] = None,
+    **overrides,
+) -> SegmentedResult:
+    """Sort every packed segment in one overflow-safe BSP sort (blocking).
+
+    The launch-then-wait form of :func:`segmented_sort_launch` —
+    byte-identical output; see there for capacity semantics.
+    """
+    return segmented_sort_launch(
+        packed, cfg, rng=rng, stats=stats, executor=executor, **overrides
+    ).wait()
 
 
 def _unpack_result(packed: PackedSegments, res, vbufs, stats) -> SegmentedResult:

@@ -81,6 +81,7 @@ class ServeEngine:
             ServiceConfig(p=self.sort_p), stats=self.capacity_stats
         )
         self.refills = 0  # queue admissions into retired decode slots
+        self.admission_prefetches = 0  # prefills launched ahead of retirement
         self._decode = jax.jit(
             lambda p, c, t: model.decode_step(p, c, t, None)
         )
@@ -172,6 +173,13 @@ class ServeEngine:
         is refilled from the queue *between* decode steps, so short
         sequences never hold the batch hostage (``self.refills`` counts
         these mid-flight admissions).
+
+        Admission is *double-buffered*: the next queued request's prefill
+        is launched ahead of any retirement (JAX async dispatch — the
+        launch returns while the device still owns the work), so it
+        overlaps the running decode steps instead of stalling them; when a
+        slot retires, the already-launched prefill is consumed and the one
+        after it launches immediately (``self.admission_prefetches``).
         """
         rng = rng if rng is not None else jax.random.key(0)
         reqs = [np.asarray(p, np.int32) for p in prompts]
@@ -206,6 +214,33 @@ class ServeEngine:
             cache, logits = self._prefill_one(reqs[rid], cache_len)
             return cache, self._sample(logits, k)[0]
 
+        # double-buffered admission: one (rid, cache, first-token) prefill
+        # kept launched-but-unconsumed ahead of the decode loop. The jitted
+        # prefill call returns as soon as it is enqueued on the device, so
+        # the prefill compute itself overlaps the decode steps that run
+        # before the next slot retires. The rng stream for a prefetched
+        # admission folds on the rid (the retiring slot is unknowable at
+        # launch time); sampling-seed layout is not part of the engine's
+        # contract (greedy decode is rng-independent).
+        prefetched = None
+
+        def prefetch_admission() -> None:
+            nonlocal prefetched
+            if prefetched is None:
+                rid = next_rid()
+                if rid is not None:
+                    k = jax.random.fold_in(rng, 1000 + rid)
+                    prefetched = (rid, *admit(rid, k))
+                    self.admission_prefetches += 1
+
+        def take_admission():
+            nonlocal prefetched
+            if prefetched is None:
+                prefetch_admission()  # cold path: nothing launched ahead
+            out, prefetched = prefetched, None
+            prefetch_admission()  # overlap the NEXT admission's prefill
+            return out
+
         # initial fill: one prefill per slot, stacked into slot lanes
         caches, toks, slot_req = [], [], []
         while len(slot_req) < max(1, slots):
@@ -222,6 +257,7 @@ class ServeEngine:
         n_slots = len(slot_req)
         caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
         tok = jnp.stack(toks)[:, None]  # (slots, 1) — batch-1 lanes
+        prefetch_admission()  # first refill's prefill rides the decode loop
 
         step = 0
         while any(r is not None for r in slot_req):
@@ -243,13 +279,12 @@ class ServeEngine:
                     if not done:
                         break
                     slot_req[s] = None
-                    nxt = next_rid()
-                    if nxt is None:
+                    adm = take_admission()  # already launched, overlapped
+                    if adm is None:
                         break
+                    nxt, cache_s, tok_s = adm
                     slot_req[s] = nxt
                     self.refills += 1
-                    rng = jax.random.fold_in(rng, 1000 + step * n_slots + s)
-                    cache_s, tok_s = admit(nxt, rng)
                     caches = jax.tree.map(
                         lambda full, one: full.at[s].set(one), caches, cache_s
                     )

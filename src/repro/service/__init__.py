@@ -2,29 +2,42 @@
 tagged, segmented BSP sort (the layer between the sort library and its
 serving/data consumers).
 
-    SortService    — request queue + dispatch: submit ragged int32 arrays,
-                     flush() (caller-driven, or auto via max_pending /
-                     flush_after_s triggers) packs them into pow2-bucketed
-                     batches, runs one overflow-safe segmented sort per
-                     batch, and returns every request sorted with its
-                     stable argsort, latency and capacity-tier telemetry.
-                     Starting tiers are resolved per batch by the capacity
-                     planner (repro.planner): fingerprint → segment-aware
-                     whp bound over the striped layout → traffic-learned
-                     rung, with fault outcomes fed back.
+    SortService    — async request queue + facade over the dispatcher:
+                     submit() returns a SortFuture immediately; flush()
+                     (caller-driven, or auto via max_pending /
+                     flush_after_s triggers) packs the queue into
+                     pow2-bucketed batches and drains the dispatch
+                     pipeline; blocking sort_one/sort_many/take_result
+                     wrap futures byte-identically to the synchronous
+                     path. Starting tiers are resolved per batch by the
+                     capacity planner (repro.planner), with fault
+                     outcomes fed back on completion callbacks.
+    Dispatcher     — the async dispatch queue: up to max_in_flight
+                     launched batches (host plan/pack of batch k+1
+                     overlaps batch k's device collectives) plus failsink
+                     per-request fault isolation (bisect a failed batch
+                     until the poison request stands alone).
+    SortFuture     — submit()'s handle: done()/result()/exception(), the
+                     failsink telemetry mark, and a cached result that
+                     survives unclaimed-store eviction.
+    SortServiceError — terminal per-request failure, naming its rids.
     BatchFormer    — the pow2 length-bucketed batch former (bounds XLA
                      recompiles to one program per bucket shape).
     ServiceConfig  — p / algorithm / capacity-tier / bucketing / auto-flush
-                     / planner-persistence knobs.
-    RequestResult  — per-request output record.
+                     / pipeline-depth / store-bound / planner knobs.
+    RequestResult  — per-request output record (+ failsink mark).
 """
 from .batch import Batch, BatchFormer
+from .dispatch import Dispatcher, SortFuture, SortServiceError
 from .service import RequestResult, ServiceConfig, SortService
 
 __all__ = [
     "Batch",
     "BatchFormer",
+    "Dispatcher",
     "RequestResult",
     "ServiceConfig",
+    "SortFuture",
     "SortService",
+    "SortServiceError",
 ]

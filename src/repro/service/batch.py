@@ -18,7 +18,7 @@ the service must sort anything it admitted.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -76,3 +76,33 @@ class BatchFormer:
             total += n
         close()
         return batches
+
+    def form_ready(
+        self,
+        requests: Sequence[Tuple[int, np.ndarray]],
+        *,
+        min_keys: Optional[int] = None,
+    ) -> Tuple[List[Batch], List[Tuple[int, np.ndarray]]]:
+        """Admission-aware forming for open-loop traffic: dispatch batches
+        that are full enough, hold the partial tail for more arrivals.
+
+        ``form`` packs everything it is given — fine at a flush barrier,
+        but an arrival loop that pumps on every poll would dispatch a
+        stream of tiny underfilled batches and waste the fused sort's
+        fan-in. ``form_ready`` returns ``(batches, held)``: every batch
+        except an underfilled *tail* (total below ``min_keys``, default
+        half the key cap) dispatches; the tail's ``(rid, keys)`` pairs are
+        handed back, still in submit order, to rejoin the queue. Only the
+        tail can be held — earlier batches were closed by the cap, and
+        holding a middle batch would reorder admissions past FIFO. A
+        deadline trigger (or plain ``form``) flushes the held tail
+        eventually, so no request is starved.
+        """
+        if min_keys is None:
+            min_keys = self.max_batch_keys // 2
+        batches = self.form(requests)
+        held: List[Tuple[int, np.ndarray]] = []
+        if batches and batches[-1].total_keys < min_keys:
+            tail = batches.pop()
+            held = list(zip(tail.rids, tail.arrays))
+        return batches, held

@@ -1,0 +1,390 @@
+"""Async dispatch queue: futures, in-flight batches, failsink isolation.
+
+The service's original ``flush`` was a barrier: every submitter stalled
+while one batch's collectives ran, and the host sat idle between batches —
+exactly the regularity the BSP model promises, wasted at the service layer.
+This module restructures dispatch around three pieces:
+
+* :class:`SortFuture` — ``submit()``'s return value. Created unresolved;
+  ``result()`` drives the dispatcher until the request completes (or
+  re-raises its failure). A future outlives the service's bounded
+  unclaimed-result store: the result is cached on the future at resolution,
+  so an evicted store entry is still claimable by the caller that holds the
+  future.
+
+* :class:`Dispatcher` — a queue of formed batches plus up to
+  ``max_in_flight`` *launched* ones. Launching a batch is host work
+  (fingerprint → plan → pack) ending in :func:`segmented_sort_launch`,
+  which dispatches the sort's first capacity rung to the device queue and
+  returns without blocking — so while batch k's collectives execute, the
+  dispatcher is already planning/packing/launching batch k+1 (JAX async
+  dispatch provides the overlap; ``overlapped_launches`` counts launches
+  performed with another batch's device work outstanding). Completion
+  (:meth:`Dispatcher.step`) blocks on the *oldest* flight only, resolves
+  its futures, and feeds the planner its fault outcome — planner feedback
+  is a completion callback, not a dispatch-path stall.
+
+* **Failsink** per-request fault isolation. A batch that raises (backend
+  error, ladder exhaustion) used to crash-requeue every rid and re-raise at
+  the submitter; one poison request could re-fail the whole queue forever.
+  Now the dispatcher *bisects*: the failed batch is split in two and both
+  halves re-formed and re-enqueued at the queue head, recursively, until
+  the poison request stands alone. A solo request gets one failsink retry;
+  if it still fails, its future resolves with a :class:`SortServiceError`
+  naming the rid — every innocent rid in the original batch completes
+  normally, and every future resolves (no rid is ever lost or silently
+  requeued). Requests that rode a failsink re-dispatch carry a
+  ``failsink=True`` telemetry mark on their result and future.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+from repro.core import TierStats
+from repro.core.api import SortExecutor
+from repro.core.segmented import (
+    InFlightSegmentedSort,
+    pack_segments,
+    segmented_sort_launch,
+)
+from repro.planner import CapacityPlanner
+
+from .batch import Batch, BatchFormer
+
+
+class SortServiceError(RuntimeError):
+    """A service request (or batch) failed; ``rids`` names the victims."""
+
+    def __init__(self, message: str, rids: Tuple[int, ...] = ()) -> None:
+        super().__init__(message)
+        self.rids = tuple(rids)
+
+
+class SortFuture:
+    """Handle for one submitted request; resolves to a ``RequestResult``.
+
+    ``submit()`` returns immediately with one of these — nothing has been
+    dispatched yet. ``result()`` blocks (driving the service's dispatcher)
+    until the request's batch completes, then returns the request's
+    :class:`repro.service.RequestResult`; if the request failed past the
+    failsink ladder, it re-raises the stored :class:`SortServiceError`.
+    ``done()`` never blocks. The resolved result is cached here, so the
+    future stays claimable even after the service's bounded unclaimed-result
+    store evicted it.
+    """
+
+    def __init__(self, rid: int, drive: Callable[["SortFuture"], None]) -> None:
+        self.rid = rid
+        self.submitted_at = time.perf_counter()
+        self.failsink = False  # rode a failsink re-dispatch
+        self._drive = drive
+        self._done = False
+        self._result = None
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self):
+        if not self._done:
+            self._drive(self)
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def exception(self) -> Optional[BaseException]:
+        if not self._done:
+            self._drive(self)
+        return self._exc
+
+    # internal — called by the dispatcher exactly once
+    def _resolve(self, result) -> None:
+        self._result = result
+        self._done = True
+
+    def _fail(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._done = True
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        state = "done" if self._done else "pending"
+        return f"SortFuture(rid={self.rid}, {state})"
+
+
+@dataclasses.dataclass
+class _Queued:
+    """One formed batch waiting for a launch slot."""
+
+    batch: Batch
+    futures: Dict[int, SortFuture]
+    failsink: bool  # this batch is a failsink re-dispatch
+
+
+@dataclasses.dataclass
+class _Flight:
+    """One launched batch: device work in the queue, not yet awaited."""
+
+    batch: Batch
+    futures: Dict[int, SortFuture]
+    failsink: bool
+    decision: object  # planner PlanDecision (None when tier pinned)
+    start_tier: str
+    stats: TierStats  # isolated per batch; merged into the shared stats
+    inflight: InFlightSegmentedSort
+
+
+class Dispatcher:
+    """Formed-batch queue + up to ``max_in_flight`` launched batches.
+
+    Owns the batch-level dispatch pipeline (plan → pack → launch → await →
+    resolve futures) and its telemetry; :class:`repro.service.SortService`
+    is a thin facade that forms batches into :meth:`enqueue` and claims
+    results through the futures. Two completion callbacks connect the
+    layers: ``on_result(future, keys, order, tier, n_per_proc)`` delivers
+    one finished request, ``on_failure(future, exc)`` one terminal failure.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        *,
+        former: BatchFormer,
+        executor: SortExecutor,
+        planner: CapacityPlanner,
+        stats: TierStats,
+        on_result: Callable,
+        on_failure: Callable,
+        max_in_flight: int = 2,
+    ) -> None:
+        self.cfg = cfg
+        self.former = former
+        self.executor = executor
+        self.planner = planner
+        self.stats = stats
+        self.on_result = on_result
+        self.on_failure = on_failure
+        self.max_in_flight = max(1, int(max_in_flight))
+        self._queue: Deque[_Queued] = collections.deque()
+        self._flights: Deque[_Flight] = collections.deque()
+        # telemetry
+        self.launches = 0
+        self.overlapped_launches = 0  # launched while another batch flew
+        self.in_flight_peak = 0
+        self.batches_dispatched = 0
+        self.keys_sorted = 0
+        self.bucket_counts: Dict[int, int] = {}  # n_per_proc -> batches
+        self.start_tiers: Dict[str, int] = {}  # starting tier -> batches
+        self.failsink_splits = 0  # batch bisections after a failure
+        self.failsink_solo_retries = 0  # solo re-dispatch of a failed rid
+        self.failsink_errors = 0  # rids terminally failed past failsink
+        self.failsink_resolved = 0  # rids completing on a failsink re-dispatch
+
+    # ------------------------------------------------------------- queue
+    @property
+    def idle(self) -> bool:
+        return not self._queue and not self._flights
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._flights)
+
+    def enqueue(
+        self,
+        batch: Batch,
+        futures: Dict[int, SortFuture],
+        *,
+        failsink: bool = False,
+        front: bool = False,
+    ) -> None:
+        item = _Queued(batch=batch, futures=futures, failsink=failsink)
+        if front:
+            self._queue.appendleft(item)
+        else:
+            self._queue.append(item)
+
+    # ---------------------------------------------------------- dispatch
+    def _resolve_batch(self, batch: Batch):
+        """(packed, sort overrides, decision) for one formed batch."""
+        if self.cfg.pair_capacity != "auto":  # explicit pin: PR 3 behaviour
+            packed = pack_segments(
+                batch.arrays,
+                self.cfg.p,
+                n_per_proc=batch.n_per_proc,
+                min_n_per_proc=self.cfg.min_n_per_proc,
+            )
+            return packed, {"pair_capacity": self.cfg.pair_capacity}, None
+        decision = self.planner.plan(
+            batch.arrays,
+            self.cfg.p,
+            n_per_proc=batch.n_per_proc,
+            min_n_per_proc=self.cfg.min_n_per_proc,
+        )
+        packed = pack_segments(
+            batch.arrays,
+            self.cfg.p,
+            n_per_proc=batch.n_per_proc,
+            min_n_per_proc=self.cfg.min_n_per_proc,
+            layout=decision.layout,
+        )
+        overrides = {"pair_capacity": decision.pair_capacity}
+        if decision.pair_capacity == "planned":
+            overrides["pair_cap_override"] = decision.pair_cap_override
+            overrides["omega"] = decision.omega
+        return packed, overrides, decision
+
+    def pump(self) -> None:
+        """Launch queued batches into free in-flight slots (non-blocking).
+
+        The host-side plan/pack/launch of a later batch runs while earlier
+        flights' collectives execute on the device — this loop is the
+        overlap the async restructure exists for.
+        """
+        while self._queue and len(self._flights) < self.max_in_flight:
+            item = self._queue.popleft()
+            try:
+                packed, overrides, decision = self._resolve_batch(item.batch)
+                batch_stats = TierStats()  # isolates this batch's outcome
+                inflight = segmented_sort_launch(
+                    packed,
+                    algorithm=self.cfg.algorithm,
+                    local_sort=self.cfg.local_sort,
+                    merge=self.cfg.merge,
+                    seed=self.cfg.seed,
+                    stats=batch_stats,
+                    executor=self.executor,
+                    **overrides,
+                )
+            except Exception as exc:  # launch-time failure: same failsink
+                self._handle_failure(item, exc)
+                continue
+            self.launches += 1
+            if len(self._flights) >= 1:
+                self.overlapped_launches += 1
+            self._flights.append(
+                _Flight(
+                    batch=item.batch,
+                    futures=item.futures,
+                    failsink=item.failsink,
+                    decision=decision,
+                    start_tier=overrides["pair_capacity"],
+                    stats=batch_stats,
+                    inflight=inflight,
+                )
+            )
+            self.in_flight_peak = max(self.in_flight_peak, len(self._flights))
+
+    def step(self) -> bool:
+        """Complete the oldest in-flight batch (blocking), refill the slots.
+
+        Returns False when there was nothing to do. Completion order is
+        launch order — FIFO, like the synchronous flush — so shared-stats
+        accumulation and planner feedback see batches in the same order as
+        before the async restructure.
+        """
+        self.pump()
+        if not self._flights:
+            return False
+        flight = self._flights.popleft()
+        try:
+            seg = flight.inflight.wait()
+        except Exception as exc:
+            self._handle_failure(flight, exc)
+            self.pump()
+            return True
+        self._complete(flight, seg)
+        self.pump()
+        return True
+
+    def drain(self) -> None:
+        """Run the pipeline dry: every queued batch launched and awaited."""
+        while self.step():
+            pass
+
+    def drive(self, fut: SortFuture) -> None:
+        """Advance the pipeline until ``fut`` resolves (or the queue dries)."""
+        while not fut.done() and not self.idle:
+            self.step()
+
+    # -------------------------------------------------------- completion
+    def _complete(self, flight: _Flight, seg) -> None:
+        self.stats.merge_from(flight.stats)
+        if flight.decision is not None:
+            # planner feedback as a completion callback: did the starting
+            # tier overflow? (Persistence stays deferred to the service's
+            # flush boundary — save_if_dirty there.)
+            self.planner.record(flight.decision, faulted=flight.stats.retries > 0)
+        self.start_tiers[flight.start_tier] = (
+            self.start_tiers.get(flight.start_tier, 0) + 1
+        )
+        self.batches_dispatched += 1
+        self.keys_sorted += flight.batch.total_keys
+        self.bucket_counts[flight.batch.n_per_proc] = (
+            self.bucket_counts.get(flight.batch.n_per_proc, 0) + 1
+        )
+        if flight.failsink:
+            self.failsink_resolved += len(flight.batch.rids)
+        for rid, keys, order in zip(flight.batch.rids, seg.keys, seg.order):
+            fut = flight.futures[rid]
+            fut.failsink = fut.failsink or flight.failsink
+            self.on_result(fut, keys, order, seg.tier, seg.n_per_proc)
+
+    def _handle_failure(self, item, exc: Exception) -> None:
+        """Failsink: bisect a failed batch instead of failing everyone.
+
+        Halves are re-formed through the batch former (their pow2 bucket
+        shrinks with the batch) and re-enqueued at the queue *head*, so the
+        isolation converges before new traffic is admitted. A solo request
+        gets exactly one failsink retry (``failsink`` marks it); a marked
+        solo failure is terminal — its future carries a
+        :class:`SortServiceError` naming the rid, chained to the backend
+        error.
+        """
+        rids, arrays = item.batch.rids, item.batch.arrays
+        if len(rids) == 1 and item.failsink:
+            rid = rids[0]
+            fut = item.futures[rid]
+            fut.failsink = True
+            err = SortServiceError(
+                f"request rid={rid} failed solo after failsink isolation: "
+                f"{exc!r}",
+                rids=(rid,),
+            )
+            err.__cause__ = exc
+            self.failsink_errors += 1
+            self.on_failure(fut, err)
+            return
+        if len(rids) == 1:
+            self.failsink_solo_retries += 1
+            halves = [list(zip(rids, arrays))]
+        else:
+            self.failsink_splits += 1
+            mid = len(rids) // 2
+            halves = [
+                list(zip(rids[:mid], arrays[:mid])),
+                list(zip(rids[mid:], arrays[mid:])),
+            ]
+        requeue: List[_Queued] = []
+        for half in halves:
+            for batch in self.former.form(half):
+                requeue.append(
+                    _Queued(
+                        batch=batch,
+                        futures={r: item.futures[r] for r in batch.rids},
+                        failsink=True,
+                    )
+                )
+        self._queue.extendleft(reversed(requeue))  # keep half order at head
+
+    def telemetry(self) -> Dict[str, int]:
+        return {
+            "max_in_flight": self.max_in_flight,
+            "in_flight_peak": self.in_flight_peak,
+            "overlapped_launches": self.overlapped_launches,
+            "failsink_splits": self.failsink_splits,
+            "failsink_solo_retries": self.failsink_solo_retries,
+            "failsink_resolved": self.failsink_resolved,
+            "failsink_errors": self.failsink_errors,
+        }

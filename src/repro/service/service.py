@@ -1,40 +1,45 @@
-"""SortService — request queue + fused dispatch over the segmented BSP sort.
+"""SortService — async request queue + fused dispatch over the segmented sort.
 
 Consumers (serve admission ordering, data-pipeline length bucketing, MoE-ish
 "sort these ids by key" callers) each used to run one whole BSP sort per
 array: a small request wastes the p-lane mesh, and every distinct length
 risks a recompile. The service turns that regime into a first-class
-workload:
+workload — and, since the async restructure, into a *pipelined* one:
 
-* ``submit(keys)`` queues a ragged int32 request and returns a request id;
-* ``flush()`` packs the queue into pow2-bucketed batches
-  (:class:`repro.service.batch.BatchFormer`), runs ONE overflow-safe
-  segmented sort per batch (`repro.core.segmented` — the (segment, key)
-  tagged fusion of every request in the batch), and returns every
-  *unclaimed* result. Completed results stay in the service's store until
-  claimed (``take_result`` / ``sort_one`` / ``sort_many``), so a request
-  piggybacked onto another caller's flush is never lost. Flushes also fire
-  automatically from ``submit`` when configured: ``max_pending`` queued
-  requests (size trigger) or an oldest-request age past ``flush_after_s``
-  (deadline trigger — also checkable via :meth:`maybe_flush` from an event
-  loop), so trickle traffic gets bounded tail latency; telemetry records
-  which trigger fired;
+* ``submit(keys)`` queues a ragged int32 request and returns a
+  :class:`repro.service.dispatch.SortFuture` **immediately** — nothing is
+  dispatched at submit time. ``future.result()`` is the only blocking
+  point; it drives the dispatcher until the request's batch completes;
+* batches are formed pow2-bucketed (:class:`repro.service.batch.BatchFormer`)
+  and handed to the :class:`repro.service.dispatch.Dispatcher`, which keeps
+  up to ``max_in_flight`` of them launched at once: the host-side
+  fingerprint → plan → pack → launch of batch k+1 overlaps batch k's device
+  collectives via JAX async dispatch. Per-request *failsink* fault
+  isolation lives there too — a failed batch is bisected until the poison
+  request stands alone, so one bad request cannot wedge the queue;
 * escalation is per batch through ``bsp_sort_safe``'s capacity-tier
-  ladder, so one adversarial request escalates only its own batch. The
-  starting tier is resolved per batch (``pair_capacity="auto"``) by the
-  **capacity planner** (:class:`repro.planner.CapacityPlanner`): the batch
-  is fingerprinted (sizes, lane segment spread, sampled duplicate
-  fractions), multi-segment batches are packed *striped* so each lane
-  holds ~1/p of every segment, and the planner's segment-aware whp bound
-  picks a sub-exact ``planned`` pair capacity — replacing PR 3's rule that
-  pinned every fused batch to ``exact``. Observed fault outcomes feed back
-  into the planner's per-bucket rung history (JSON-persisted via
-  ``planner_path``), so tiers adapt to live traffic. An explicit
+  ladder. The starting tier is resolved per batch (``pair_capacity="auto"``)
+  by the **capacity planner** (:class:`repro.planner.CapacityPlanner`),
+  whose fault feedback now arrives as a *completion callback* when a
+  flight lands, not inline on the dispatch path. An explicit
   ``pair_capacity="whp"``/``"exact"`` still pins every batch;
-* telemetry: per-request wall latency (submit → result), the accumulated
-  :class:`TierStats` of every escalation, per-bucket batch counts,
-  auto-flush trigger counts, planner plan/promotion counters, and the
-  shared :class:`SortExecutor`'s trace counts for compile-reuse assertions.
+* the blocking API is a compatibility wrapper over futures, byte-identical
+  to the synchronous path: ``flush()`` drains the pipeline and returns
+  every *unclaimed* result, ``sort_one``/``sort_many`` are
+  submit + ``future.result()``. Completed results stay in a **bounded**
+  unclaimed store until claimed (``take_result`` / ``sort_one`` /
+  ``sort_many``): past ``max_unclaimed`` the oldest entries are evicted
+  (``evicted_results`` telemetry) — but a result is cached on its future
+  at resolution, so the caller that actually holds the future never loses
+  it. Auto-flush triggers (``max_pending`` size / ``flush_after_s``
+  deadline) are now non-blocking: they form + launch, and let the caller
+  block at claim time;
+* telemetry: per-request wall latency (submit → result) with
+  memoized percentiles (recomputed only when new completions landed, so
+  soak-loop polling doesn't scale with window size), the accumulated
+  :class:`TierStats`, dispatcher counters (in-flight peak, overlapped
+  launches, failsink outcomes), per-bucket batch counts, auto-flush
+  trigger counts, and planner plan/promotion counters.
 
 One process-wide default executor serves all services, so every service
 instance (and every other sort caller) shares compiled programs per bucket.
@@ -45,15 +50,15 @@ import collections
 import dataclasses
 import time
 import warnings
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core import TierStats
 from repro.core.api import SortExecutor, default_executor
-from repro.core.segmented import pack_segments, segmented_sort_safe
 from repro.planner import CapacityPlanner
 from repro.service.batch import BatchFormer
+from repro.service.dispatch import Dispatcher, SortFuture, SortServiceError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,11 +85,19 @@ class ServiceConfig:
     # planner history persistence (pair_capacity="auto" only); None keeps
     # the learned rungs in-process
     planner_path: Optional[str] = None
-    # auto-flush triggers (both optional): flush from submit() once this
-    # many requests are pending / once the oldest pending request is older
-    # than this deadline. Caller-driven flush() stays supported.
+    # auto-flush triggers (both optional): form + launch from submit() once
+    # this many requests are pending / once the oldest pending request is
+    # older than this deadline (non-blocking — block at future.result()).
+    # Caller-driven flush() stays supported.
     max_pending: Optional[int] = None
     flush_after_s: Optional[float] = None
+    # dispatch pipeline depth: batches launched-but-unawaited at once; 1
+    # restores strictly serial dispatch (launch, wait, launch, ...)
+    max_in_flight: int = 2
+    # unclaimed-result store bound: oldest-first eviction past this many
+    # unclaimed results (each eviction counts in ``evicted_results``; the
+    # result stays cached on its SortFuture). None disables the bound.
+    max_unclaimed: Optional[int] = 1024
 
 
 @dataclasses.dataclass
@@ -97,13 +110,14 @@ class RequestResult:
     tier: Optional[str]  # capacity tier that served this request's batch
     n_per_proc: int  # pow2 bucket the batch compiled under
     latency_s: float  # submit -> result wall time
+    failsink: bool = False  # completed via a failsink re-dispatch
 
 
 @dataclasses.dataclass
 class _Pending:
     rid: int
     keys: np.ndarray
-    submitted_at: float
+    future: SortFuture
 
 
 class SortService:
@@ -116,9 +130,8 @@ class SortService:
         planner: Optional[CapacityPlanner] = None,
     ) -> None:
         # reject unsupported pins up front: "planned" needs a per-batch
-        # bound only the planner can supply — a pinned service would raise
-        # inside flush and the crash-safe re-queue would then re-raise on
-        # every later flush (the request could never complete)
+        # bound only the planner can supply — a pinned service would fail
+        # every batch into the failsink and error every future
         if cfg.pair_capacity not in ("auto", "whp", "exact"):
             raise ValueError(
                 f"unsupported service pair_capacity {cfg.pair_capacity!r}: "
@@ -137,6 +150,16 @@ class SortService:
         self.former = BatchFormer(
             cfg.p, cfg.max_batch_keys, cfg.min_n_per_proc
         )
+        self.dispatcher = Dispatcher(
+            cfg,
+            former=self.former,
+            executor=self.executor,
+            planner=self.planner,
+            stats=self.stats,
+            on_result=self._deliver,
+            on_failure=self._deliver_failure,
+            max_in_flight=cfg.max_in_flight,
+        )
         self._pending: List[_Pending] = []
         self._completed: Dict[int, RequestResult] = {}  # unclaimed results
         self._next_rid = 0
@@ -145,47 +168,70 @@ class SortService:
         # lifetime request count is its own counter
         self.latencies: Deque[float] = collections.deque(maxlen=1 << 16)
         self.requests_done = 0
-        self.batches_dispatched = 0
-        self.keys_sorted = 0
-        self.bucket_counts: Dict[int, int] = {}  # n_per_proc -> batches
+        self.requests_failed = 0
+        self.evicted_results = 0
         self.flush_triggers: Dict[str, int] = {}  # manual/size/deadline
-        self.start_tiers: Dict[str, int] = {}  # starting tier -> batches
+        self._lat_memo = (-1, {})  # (requests_done it covers, stats row)
+
+    # -------------------------------------------- dispatcher delegation
+    # batch-level counters live on the dispatcher (completion is its job
+    # now); these read-only views keep the PR-3/4 telemetry surface
+    @property
+    def batches_dispatched(self) -> int:
+        return self.dispatcher.batches_dispatched
+
+    @property
+    def keys_sorted(self) -> int:
+        return self.dispatcher.keys_sorted
+
+    @property
+    def bucket_counts(self) -> Dict[int, int]:
+        return self.dispatcher.bucket_counts
+
+    @property
+    def start_tiers(self) -> Dict[str, int]:
+        return self.dispatcher.start_tiers
 
     # ------------------------------------------------------------- queue
-    def submit(self, keys: np.ndarray) -> int:
-        """Queue one ragged request (1-D int32 keys); returns its id.
+    def submit(self, keys: np.ndarray) -> SortFuture:
+        """Queue one ragged request (1-D int32 keys); returns a future.
 
-        May flush the queue before returning when an auto-flush trigger is
-        configured and fires — the submitted request's result is then
-        already claimable (``take_result``).
+        The future resolves at ``result()`` time (driving the dispatcher as
+        needed) — nothing is dispatched before an auto-flush trigger, a
+        ``flush``/``flush_async``, or a claim forces it. Auto-flush
+        triggers launch batches without blocking; the submitted request's
+        result is then claimable via the returned future or
+        ``take_result``.
         """
         arr = np.asarray(keys, np.int32).reshape(-1)
         rid = self._next_rid
         self._next_rid += 1
-        self._pending.append(_Pending(rid, arr, time.perf_counter()))
+        fut = SortFuture(rid, self._drive)
+        self._pending.append(_Pending(rid, arr, fut))
         if (
             self.cfg.max_pending is not None
             and len(self._pending) >= self.cfg.max_pending
         ):
-            self.flush(trigger="size")
+            self.flush_async(trigger="size")
         else:
             self.maybe_flush()
-        return rid
+        return fut
 
     def maybe_flush(self) -> bool:
-        """Deadline check: flush if the oldest pending request is overdue.
+        """Deadline check: launch the queue if the oldest request is overdue.
 
         Called from ``submit`` and pollable from an event loop (the service
         has no thread of its own, so a deadline only fires when *somebody*
-        calls in). Returns whether a flush ran.
+        calls in). Non-blocking: batches are formed and launched, results
+        claimed later. Returns whether a flush was triggered.
         """
         if (
             self.cfg.flush_after_s is not None
             and self._pending
-            and time.perf_counter() - self._pending[0].submitted_at
+            and time.perf_counter() - self._pending[0].future.submitted_at
             >= self.cfg.flush_after_s
         ):
-            self.flush(trigger="deadline")
+            self.flush_async(trigger="deadline")
             return True
         return False
 
@@ -194,101 +240,70 @@ class SortService:
         return len(self._pending)
 
     # ---------------------------------------------------------- dispatch
-    def _resolve_batch(self, batch):
-        """(packed, sort overrides, decision) for one formed batch."""
-        if self.cfg.pair_capacity != "auto":  # explicit pin: PR 3 behaviour
-            packed = pack_segments(
-                batch.arrays,
-                self.cfg.p,
-                n_per_proc=batch.n_per_proc,
-                min_n_per_proc=self.cfg.min_n_per_proc,
-            )
-            return packed, {"pair_capacity": self.cfg.pair_capacity}, None
-        decision = self.planner.plan(
-            batch.arrays,
-            self.cfg.p,
-            n_per_proc=batch.n_per_proc,
-            min_n_per_proc=self.cfg.min_n_per_proc,
-        )
-        packed = pack_segments(
-            batch.arrays,
-            self.cfg.p,
-            n_per_proc=batch.n_per_proc,
-            min_n_per_proc=self.cfg.min_n_per_proc,
-            layout=decision.layout,
-        )
-        overrides = {"pair_capacity": decision.pair_capacity}
-        if decision.pair_capacity == "planned":
-            overrides["pair_cap_override"] = decision.pair_cap_override
-            overrides["omega"] = decision.omega
-        return packed, overrides, decision
+    def flush_async(self, trigger: str = "manual") -> bool:
+        """Form every pending request into batches and start launching.
 
-    def flush(self, trigger: str = "manual") -> Dict[int, RequestResult]:
-        """Sort everything queued; one fused segmented sort per batch.
-
-        Returns every unclaimed result — the newly completed ones plus any
-        earlier completion not yet taken (a request fused into another
-        caller's flush stays claimable). Claiming (``take_result`` /
-        ``sort_one`` / ``sort_many``) removes a result from the store.
+        Non-blocking: batches enter the dispatcher's queue and up to
+        ``max_in_flight`` of them launch immediately (host planning/packing
+        overlapping any in-flight device work). Returns whether anything
+        was enqueued.
         """
         todo, self._pending = self._pending, []
-        results = self._completed
         if todo:
             self.flush_triggers[trigger] = (
                 self.flush_triggers.get(trigger, 0) + 1
             )
-        submitted = {r.rid: r.submitted_at for r in todo}
-        completed_rids = set()
+        fut_by_rid = {r.rid: r.future for r in todo}
+        for batch in self.former.form([(r.rid, r.keys) for r in todo]):
+            self.dispatcher.enqueue(
+                batch, {rid: fut_by_rid[rid] for rid in batch.rids}
+            )
+        self.dispatcher.pump()
+        return bool(todo)
+
+    def flush_ready(self, min_keys: Optional[int] = None) -> bool:
+        """Admission-aware launch for open-loop arrival pumps.
+
+        Dispatches only batches that are full enough
+        (:meth:`BatchFormer.form_ready`); an underfilled tail batch stays
+        pending for more traffic — the deadline trigger or any plain
+        ``flush`` clears it, so nothing starves. Non-blocking; returns
+        whether any batch launched.
+        """
+        todo, self._pending = self._pending, []
+        fut_by_rid = {r.rid: r.future for r in todo}
+        batches, held = self.former.form_ready(
+            [(r.rid, r.keys) for r in todo], min_keys=min_keys
+        )
+        if batches:
+            self.flush_triggers["ready"] = (
+                self.flush_triggers.get("ready", 0) + 1
+            )
+        for batch in batches:
+            self.dispatcher.enqueue(
+                batch, {rid: fut_by_rid[rid] for rid in batch.rids}
+            )
+        self._pending = [
+            _Pending(rid, keys, fut_by_rid[rid]) for rid, keys in held
+        ] + self._pending
+        self.dispatcher.pump()
+        return bool(batches)
+
+    def flush(self, trigger: str = "manual") -> Dict[int, RequestResult]:
+        """Sort everything queued; one fused segmented sort per batch.
+
+        Blocking wrapper over the async pipeline: forms + launches, then
+        drains every in-flight batch. Returns every unclaimed result — the
+        newly completed ones plus any earlier completion not yet taken (a
+        request fused into another caller's flush stays claimable).
+        Claiming (``take_result`` / ``sort_one`` / ``sort_many``) removes a
+        result from the store. A failed request does NOT raise here — its
+        future (and ``take_result``) carries the :class:`SortServiceError`.
+        """
+        self.flush_async(trigger)
         try:
-            for batch in self.former.form([(r.rid, r.keys) for r in todo]):
-                packed, overrides, decision = self._resolve_batch(batch)
-                batch_stats = TierStats()  # isolates this batch's outcome
-                seg = segmented_sort_safe(
-                    packed,
-                    algorithm=self.cfg.algorithm,
-                    local_sort=self.cfg.local_sort,
-                    merge=self.cfg.merge,
-                    seed=self.cfg.seed,
-                    stats=batch_stats,
-                    executor=self.executor,
-                    **overrides,
-                )
-                self.stats.merge_from(batch_stats)
-                if decision is not None:
-                    # planner feedback: did the starting tier overflow?
-                    self.planner.record(
-                        decision, faulted=batch_stats.retries > 0
-                    )
-                self.start_tiers[overrides["pair_capacity"]] = (
-                    self.start_tiers.get(overrides["pair_capacity"], 0) + 1
-                )
-                self.batches_dispatched += 1
-                self.keys_sorted += batch.total_keys
-                self.bucket_counts[batch.n_per_proc] = (
-                    self.bucket_counts.get(batch.n_per_proc, 0) + 1
-                )
-                done = time.perf_counter()
-                for rid, keys, order in zip(batch.rids, seg.keys, seg.order):
-                    lat = done - submitted[rid]
-                    self.latencies.append(lat)
-                    self.requests_done += 1
-                    results[rid] = RequestResult(
-                        rid=rid,
-                        keys=keys,
-                        order=order,
-                        tier=seg.tier,
-                        n_per_proc=seg.n_per_proc,
-                        latency_s=lat,
-                    )
-                completed_rids.update(batch.rids)
+            self.dispatcher.drain()
         finally:
-            # an admitted request may never be dropped: if a batch raised
-            # (XLA OOM, backend error), everything not yet completed goes
-            # back to the queue head for the next flush
-            if len(completed_rids) < len(todo):
-                self._pending = [
-                    r for r in todo if r.rid not in completed_rids
-                ] + self._pending
             # one history write per flush (not per batch), raise or not.
             # Persistence is telemetry, not dispatch: an unwritable path
             # must neither fail completed sorts nor mask a batch exception.
@@ -296,47 +311,135 @@ class SortService:
                 self.planner.save_if_dirty()
             except OSError as e:
                 warnings.warn(f"planner history not persisted: {e}")
-        return dict(results)
+        return dict(self._completed)
 
-    def take_result(self, rid: int) -> RequestResult:
-        """Claim (remove) one completed result; flushes it if still queued."""
-        if rid not in self._completed and any(
-            r.rid == rid for r in self._pending
+    def _drive(self, fut: SortFuture) -> None:
+        """SortFuture's engine: launch anything queued, run until it lands."""
+        if any(r.rid == fut.rid for r in self._pending):
+            self.flush_async(trigger="claim")
+        self.dispatcher.drive(fut)
+
+    # -------------------------------------------------------- completion
+    def _deliver(self, fut: SortFuture, keys, order, tier, n_per_proc) -> None:
+        """Dispatcher completion callback: resolve the future + store."""
+        lat = time.perf_counter() - fut.submitted_at
+        self.latencies.append(lat)
+        self.requests_done += 1
+        res = RequestResult(
+            rid=fut.rid,
+            keys=keys,
+            order=order,
+            tier=tier,
+            n_per_proc=n_per_proc,
+            latency_s=lat,
+            failsink=fut.failsink,
+        )
+        fut._resolve(res)
+        self._completed[fut.rid] = res
+        if self.cfg.max_unclaimed is not None:
+            while len(self._completed) > self.cfg.max_unclaimed:
+                oldest = next(iter(self._completed))  # insertion order
+                del self._completed[oldest]
+                self.evicted_results += 1
+
+    def _deliver_failure(self, fut: SortFuture, exc: BaseException) -> None:
+        self.requests_failed += 1
+        fut._fail(exc)
+
+    def take_result(
+        self, rid: Union[int, SortFuture]
+    ) -> RequestResult:
+        """Claim (remove) one completed result; drives it if still in flight.
+
+        Accepts a rid or the :class:`SortFuture` itself. Raises the
+        request's :class:`SortServiceError` if it terminally failed, and a
+        ``SortServiceError`` naming the rid if no such result exists
+        (never a bare ``KeyError``) — unknown, already claimed, or evicted
+        without the future in hand.
+        """
+        if isinstance(rid, SortFuture):
+            res = rid.result()  # drives; raises the failure if it failed
+            self._completed.pop(rid.rid, None)
+            return res
+        if rid not in self._completed and (
+            any(r.rid == rid for r in self._pending)
+            or not self.dispatcher.idle
         ):
             self.flush()
-        return self._completed.pop(rid)
+        try:
+            return self._completed.pop(rid)
+        except KeyError:
+            raise SortServiceError(
+                f"no claimable result for rid={rid}: unknown, already "
+                "claimed, failed, or evicted from the unclaimed store "
+                "(hold the SortFuture to survive eviction)",
+                rids=(rid,),
+            ) from None
 
     # ------------------------------------------------------ conveniences
     def sort_many(self, arrays: Sequence[np.ndarray]) -> List[RequestResult]:
-        """Submit a batch of requests and flush; results in input order."""
-        rids = [self.submit(a) for a in arrays]
+        """Submit a batch of requests and flush; results in input order.
+
+        A request that terminally failed (failsink-isolated solo and still
+        failing) raises a :class:`SortServiceError` naming every failed
+        rid — nothing is claimed then, so the completed requests' results
+        all remain claimable via ``take_result``.
+        """
+        futs = [self.submit(a) for a in arrays]
         self.flush()
-        return [self._completed.pop(rid) for rid in rids]
+        failed = [f for f in futs if f.exception() is not None]
+        if failed:
+            raise SortServiceError(
+                f"sort_many: {len(failed)} of {len(futs)} requests failed "
+                f"(rids {[f.rid for f in failed]}); completed results stay "
+                "claimable via take_result",
+                rids=tuple(f.rid for f in failed),
+            ) from failed[0].exception()
+        return [self.take_result(f) for f in futs]
 
     def sort_one(self, keys: np.ndarray) -> RequestResult:
         """Sort a single request through the service. It fuses with anything
         already queued — and the piggybacked requests' results stay in the
         store for their own callers (``flush``/``take_result``)."""
-        rid = self.submit(keys)
+        fut = self.submit(keys)
         self.flush()
-        return self._completed.pop(rid)
+        return self.take_result(fut)
+
+    def _latency_row(self) -> Dict[str, object]:
+        """Latency stats, memoized per completion count: polling telemetry
+        in a soak loop must not rescan the full window when nothing new
+        completed."""
+        done, row = self._lat_memo
+        if done == self.requests_done:
+            return row
+        lat = np.fromiter(self.latencies, np.float64)
+        row = {}
+        if lat.size:
+            p50, p99 = np.quantile(lat, [0.5, 0.99])
+            row = {
+                "lat_mean_ms": round(float(lat.mean()) * 1e3, 3),
+                "lat_p50_ms": round(float(p50) * 1e3, 3),
+                "lat_p99_ms": round(float(p99) * 1e3, 3),
+            }
+        self._lat_memo = (self.requests_done, row)
+        return row
 
     def telemetry(self) -> Dict[str, object]:
         """Flat snapshot for logs/benchmark rows; latency stats cover the
         bounded recent window, ``requests`` the service lifetime."""
-        lat = np.fromiter(self.latencies, np.float64)
         row: Dict[str, object] = {
             "requests": self.requests_done,
+            "requests_failed": self.requests_failed,
             "batches": self.batches_dispatched,
             "keys_sorted": self.keys_sorted,
             "buckets": dict(sorted(self.bucket_counts.items())),
             "flush_triggers": dict(sorted(self.flush_triggers.items())),
             "start_tiers": dict(sorted(self.start_tiers.items())),
+            "evicted_results": self.evicted_results,
+            "dispatch": self.dispatcher.telemetry(),
         }
         if self.cfg.pair_capacity == "auto":
             row["planner"] = self.planner.telemetry()
-        if lat.size:
-            row["lat_mean_ms"] = round(float(lat.mean()) * 1e3, 3)
-            row["lat_p99_ms"] = round(float(np.quantile(lat, 0.99)) * 1e3, 3)
+        row.update(self._latency_row())
         row.update(self.stats.as_row())
         return row

@@ -1,0 +1,243 @@
+"""Async dispatch: futures, in-flight batches, failsink fault isolation,
+bounded unclaimed store, admission-aware forming, telemetry memoization."""
+import numpy as np
+import pytest
+
+from repro.core import SortExecutor, sort_segments
+from repro.service import (
+    BatchFormer,
+    ServiceConfig,
+    SortFuture,
+    SortService,
+    SortServiceError,
+)
+
+pytestmark = pytest.mark.fast
+
+POISON_LEN = 777  # unique request length the poison monkeypatches key on
+
+
+def _arrays(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(-(2**31), 2**31, s).astype(np.int32) for s in sizes]
+
+
+def test_submit_returns_future_without_dispatching():
+    """Acceptance: submit() queues and returns — nothing launches until a
+    flush trigger or a claim forces it."""
+    svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
+    arrays = _arrays([100, 300, 50])
+    futs = [svc.submit(a) for a in arrays]
+    assert all(isinstance(f, SortFuture) and not f.done() for f in futs)
+    assert svc.pending == 3
+    assert svc.dispatcher.idle and svc.dispatcher.launches == 0
+    for a, f in zip(arrays, futs):
+        res = f.result()  # the only blocking point
+        assert np.array_equal(res.keys, np.sort(a))
+        assert np.array_equal(a[res.order], res.keys)
+
+
+def test_futures_path_byte_identical_to_fused_sync_path():
+    """Acceptance: results claimed through futures are byte-identical to the
+    core fused segmented sort (itself acceptance-tested against the
+    per-request ``bsp_sort_safe`` reference in test_service.py)."""
+    sizes = [5, 333, 64, 1000, 7, 512]
+    arrays = _arrays(sizes, seed=9)
+    ref = sort_segments(arrays, p=8)
+    svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
+    futs = [svc.submit(a) for a in arrays]
+    svc.flush()
+    for i, f in enumerate(futs):
+        res = f.result()
+        assert res.keys.dtype == ref.keys[i].dtype == np.int32
+        assert np.array_equal(res.keys, ref.keys[i])
+        assert np.array_equal(res.order, ref.order[i])
+
+
+def test_multiple_batches_in_flight_overlap():
+    """The pipeline keeps max_in_flight batches launched at once: with four
+    formed batches, two fly before anything is awaited, and later launches
+    happen while earlier flights' device work is outstanding."""
+    svc = SortService(
+        ServiceConfig(p=8, max_batch_keys=400, max_in_flight=2),
+        executor=SortExecutor(),
+    )
+    arrays = _arrays([300, 300, 300, 300], seed=3)
+    futs = [svc.submit(a) for a in arrays]
+    svc.flush_async()
+    assert svc.dispatcher.in_flight == 2  # both slots filled, none awaited
+    assert svc.dispatcher.launches == 2
+    assert not any(f.done() for f in futs)
+    svc.flush()  # drain the pipeline
+    tele = svc.telemetry()["dispatch"]
+    assert tele["in_flight_peak"] >= 2
+    assert tele["overlapped_launches"] >= 1  # launched under outstanding work
+    for a, f in zip(arrays, futs):
+        assert np.array_equal(f.result().keys, np.sort(a))
+
+
+def test_poison_request_failsink_isolates_and_resolves_solo(monkeypatch):
+    """Satellite: one poison request in a fused batch. The failsink bisects
+    until the poison stands alone; every innocent request completes, the
+    poison sorts solo in its own bucket, and nothing raises."""
+    import repro.service.dispatch as disp_mod
+
+    orig = disp_mod.segmented_sort_launch
+
+    def poisoned(packed, **kw):  # fails only while fused with others
+        if POISON_LEN in packed.sizes and len(packed.sizes) > 1:
+            raise RuntimeError("ladder exhausted (simulated)")
+        return orig(packed, **kw)
+
+    monkeypatch.setattr(disp_mod, "segmented_sort_launch", poisoned)
+    svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
+    arrays = _arrays([300, 300, POISON_LEN, 300, 300], seed=5)
+    futs = [svc.submit(a) for a in arrays]
+    out = svc.flush()
+    assert set(out) == {f.rid for f in futs}  # no rid lost
+    for a, f in zip(arrays, futs):
+        res = f.result()
+        assert np.array_equal(res.keys, np.sort(a))
+    poison = futs[2].result()
+    assert poison.failsink  # routed through the failsink
+    assert poison.n_per_proc == 128  # solo pow2 bucket for 777 keys over p=8
+    tele = svc.telemetry()["dispatch"]
+    assert tele["failsink_splits"] >= 1
+    assert tele["failsink_errors"] == 0
+    assert tele["failsink_resolved"] >= 1
+
+
+def test_poison_request_failsink_terminal_error_spares_the_batch(monkeypatch):
+    """Satellite: a request that fails even solo resolves with a
+    SortServiceError naming its rid — every other request in the original
+    batch still completes, and flush() itself never raises."""
+    import repro.service.dispatch as disp_mod
+
+    orig = disp_mod.segmented_sort_launch
+
+    def poisoned(packed, **kw):  # fails every dispatch containing the rid
+        if POISON_LEN in packed.sizes:
+            raise RuntimeError("backend error (simulated)")
+        return orig(packed, **kw)
+
+    monkeypatch.setattr(disp_mod, "segmented_sort_launch", poisoned)
+    svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
+    arrays = _arrays([200, POISON_LEN, 200, 200], seed=6)
+    futs = [svc.submit(a) for a in arrays]
+    svc.flush()  # does NOT raise: the failure lives on the poison future
+    for i, (a, f) in enumerate(zip(arrays, futs)):
+        if i == 1:
+            continue
+        assert np.array_equal(f.result().keys, np.sort(a))
+    exc = futs[1].exception()
+    assert isinstance(exc, SortServiceError)
+    assert exc.rids == (futs[1].rid,) and str(futs[1].rid) in str(exc)
+    with pytest.raises(SortServiceError):
+        futs[1].result()
+    with pytest.raises(SortServiceError):
+        svc.take_result(futs[1])
+    tele = svc.telemetry()
+    assert tele["requests_failed"] == 1
+    assert tele["dispatch"]["failsink_errors"] == 1
+    # bisection isolated the poison (its failed solo dispatch WAS its retry)
+    assert tele["dispatch"]["failsink_splits"] >= 2
+
+
+def test_sort_many_surfaces_failure_as_service_error_not_keyerror(monkeypatch):
+    """Satellite: the blocking conveniences never raise a bare KeyError for
+    a failed request — they surface the SortServiceError naming the rid,
+    and the other requests' results stay claimable."""
+    import repro.service.dispatch as disp_mod
+
+    orig = disp_mod.segmented_sort_launch
+
+    def poisoned(packed, **kw):
+        if POISON_LEN in packed.sizes:
+            raise RuntimeError("backend error (simulated)")
+        return orig(packed, **kw)
+
+    monkeypatch.setattr(disp_mod, "segmented_sort_launch", poisoned)
+    svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
+    arrays = _arrays([100, POISON_LEN, 150], seed=7)
+    with pytest.raises(SortServiceError) as ei:
+        svc.sort_many(arrays)
+    assert ei.value.rids == (1,)  # the poison's rid, by submit order
+    for rid, a in [(0, arrays[0]), (2, arrays[2])]:
+        assert np.array_equal(svc.take_result(rid).keys, np.sort(a))
+    # claiming an unknown/failed rid is a SortServiceError too, not KeyError
+    with pytest.raises(SortServiceError, match="rid=1"):
+        svc.take_result(1)
+
+
+def test_unclaimed_store_bounded_with_eviction_counter():
+    """Satellite: the unclaimed-result store is capped with oldest-first
+    eviction; the eviction is telemetry-counted and the SortFuture's cached
+    result survives it."""
+    svc = SortService(
+        ServiceConfig(p=8, max_unclaimed=4), executor=SortExecutor()
+    )
+    arrays = _arrays([50] * 6, seed=8)
+    futs = [svc.submit(a) for a in arrays]
+    out = svc.flush()
+    assert set(out) == {f.rid for f in futs[2:]}  # oldest two evicted
+    assert svc.evicted_results == 2
+    assert svc.telemetry()["evicted_results"] == 2
+    with pytest.raises(SortServiceError, match="evicted"):
+        svc.take_result(futs[0].rid)  # store copy is gone
+    res0 = futs[0].result()  # ...but the future's cached copy is not
+    assert np.array_equal(res0.keys, np.sort(arrays[0]))
+    assert np.array_equal(svc.take_result(futs[5]).keys, np.sort(arrays[5]))
+
+
+def test_telemetry_latency_stats_memoized_per_completion(monkeypatch):
+    """Satellite: polling telemetry() must not rescan the latency window
+    when nothing new completed — quantiles recompute only after new
+    results land."""
+    svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
+    svc.sort_many(_arrays([100, 200, 300], seed=10))
+    calls = {"n": 0}
+    orig = np.quantile
+
+    def counting(*args, **kw):
+        calls["n"] += 1
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(np, "quantile", counting)
+    first = svc.telemetry()
+    after_first = calls["n"]
+    assert after_first >= 1 and first["lat_p99_ms"] > 0
+    for _ in range(5):  # soak-loop polling: no new completions, no rescans
+        again = svc.telemetry()
+    assert calls["n"] == after_first
+    assert again["lat_p99_ms"] == first["lat_p99_ms"]
+    svc.sort_one(np.arange(64, dtype=np.int32)[::-1].copy())
+    svc.telemetry()  # a new completion invalidates the memo
+    assert calls["n"] > after_first
+
+
+def test_form_ready_holds_partial_tail_and_flush_ready_launches_full():
+    """Admission-aware forming: full batches dispatch, the underfilled tail
+    is held for more traffic (and a plain flush clears it)."""
+    former = BatchFormer(p=8, max_batch_keys=1000, min_n_per_proc=8)
+    reqs = [(i, np.zeros(s, np.int32)) for i, s in enumerate([600, 300, 200])]
+    ready, held = former.form_ready(reqs, min_keys=500)
+    assert [b.rids for b in ready] == [[0, 1]]  # 900 keys: full enough
+    assert [rid for rid, _ in held] == [2]  # 200-key tail held, FIFO order
+    # default threshold is half the cap
+    ready2, held2 = former.form_ready(reqs)
+    assert [b.rids for b in ready2] == [[0, 1]] and len(held2) == 1
+    assert former.form_ready([]) == ([], [])
+
+    svc = SortService(
+        ServiceConfig(p=8, max_batch_keys=1000), executor=SortExecutor()
+    )
+    arrays = _arrays([600, 300, 200], seed=11)
+    futs = [svc.submit(a) for a in arrays]
+    assert svc.flush_ready(min_keys=500)  # launches the 900-key batch only
+    assert svc.pending == 1  # the tail stays queued
+    assert svc.flush_triggers.get("ready") == 1
+    assert not svc.flush_ready(min_keys=500)  # still underfilled: no-op
+    svc.flush()  # deadline/manual path clears the held tail
+    assert svc.pending == 0
+    for a, f in zip(arrays, futs):
+        assert np.array_equal(f.result().keys, np.sort(a))

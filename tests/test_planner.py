@@ -583,3 +583,32 @@ def test_bench_diff_gate(tmp_path):
     # row-count drift is structural
     short = run([rows[0]])
     assert short.returncode == 2
+
+
+def test_bench_diff_percentile_tolerance(tmp_path):
+    """Latency percentiles gate at the looser --tol-pctile (default 2x
+    --tol): a p99 wobble a mean would fail on passes, a real p99 collapse
+    still fails, and an explicit --tol-pctile overrides the default."""
+    rows = [{"mix": "U", "lat_mean_ms": 5.0, "lat_p99_ms": 10.0}]
+    base = _write_bench(tmp_path / "base.json", rows)
+    script = os.path.join(SCRIPTS, "bench_diff.py")
+
+    def run(fresh_rows, *extra):
+        fresh = _write_bench(tmp_path / "fresh.json", fresh_rows)
+        return subprocess.run(
+            [sys.executable, script, base, fresh, *extra],
+            capture_output=True, text=True,
+        )
+
+    # +50% on p99 is inside the default percentile gate (2 x 30%)...
+    ok = run([dict(rows[0], lat_p99_ms=15.0)])
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    # ...but the same +50% on the mean is a plain-latency regression
+    mean = run([dict(rows[0], lat_mean_ms=7.5)])
+    assert mean.returncode == 1 and "lat_mean_ms" in mean.stdout
+    # a genuine p99 collapse beyond the loose gate still fails
+    tail = run([dict(rows[0], lat_p99_ms=25.0)])
+    assert tail.returncode == 1 and "lat_p99_ms" in tail.stdout
+    # an explicit --tol-pctile overrides the 2x default
+    tight = run([dict(rows[0], lat_p99_ms=15.0)], "--tol-pctile", "0.2")
+    assert tight.returncode == 1 and "lat_p99_ms" in tight.stdout

@@ -87,6 +87,9 @@ def test_serve_engine_continuous_batching_refills_retired_slots():
     # decoding, freeing its slot for the first queued request
     outs = eng.serve(prompts, slots=2, max_new=[2, 6, 6, 6])
     assert eng.refills >= 1  # the queue actually backfilled a retired slot
+    # the backfilled prefill was launched AHEAD of the retirement (double-
+    # buffered admission), not synchronously inside the refill
+    assert eng.admission_prefetches >= eng.refills
     assert [len(o) for o in outs] == [2, 6, 6, 6]
     ref = np.asarray(eng.generate(jnp.asarray(np.stack(prompts))))
     for i, o in enumerate(outs):  # greedy ⇒ byte-comparable per request

@@ -113,19 +113,23 @@ def test_flush_keeps_piggybacked_results_claimable():
     sort_one drains the queue but only claims its OWN result."""
     svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
     a = np.arange(100, dtype=np.int32)[::-1].copy()
-    rid_a = svc.submit(a)
+    fut_a = svc.submit(a)  # a SortFuture, not yet dispatched
+    assert not fut_a.done() and svc.dispatcher.idle
     b = np.arange(50, dtype=np.int32)[::-1].copy()
     res_b = svc.sort_one(b)  # fuses a into the same flush
     assert np.array_equal(res_b.keys, np.sort(b))
-    assert svc.pending == 0
+    assert svc.pending == 0 and fut_a.done()  # piggybacked: already resolved
     later = svc.flush()  # nothing queued, but a's result is still unclaimed
-    assert set(later) == {rid_a}
-    res_a = svc.take_result(rid_a)
+    assert set(later) == {fut_a.rid}
+    res_a = svc.take_result(fut_a.rid)  # claimable by rid alone
     assert np.array_equal(res_a.keys, np.sort(a))
     assert svc.flush() == {}  # claimed: the store is empty
-    # take_result flushes a still-pending rid on demand
-    rid_c = svc.submit(a)
-    assert np.array_equal(svc.take_result(rid_c).keys, np.sort(a))
+    assert fut_a.result() is res_a  # the future's cached copy survives
+    # take_result drives a still-pending request on demand (rid or future)
+    fut_c = svc.submit(a)
+    assert np.array_equal(svc.take_result(fut_c).keys, np.sort(a))
+    fut_d = svc.submit(a)
+    assert np.array_equal(svc.take_result(fut_d.rid).keys, np.sort(a))
 
 
 def test_batch_former_pow2_buckets_and_key_cap():
@@ -252,19 +256,22 @@ def test_single_segment_batch_serves_on_cheap_sub_exact_tier():
     assert res.tier == "whp" and np.array_equal(res.keys, np.sort(lens))
 
 
-def test_flush_requeues_admitted_requests_on_batch_failure(monkeypatch):
-    """An admitted request may never be dropped: if a batch's sort raises,
-    everything not yet completed must return to the queue and a later
-    flush must still deliver it."""
-    import repro.service.service as svc_mod
+def test_flush_failsink_retries_failed_batch_without_losing_requests(
+    monkeypatch,
+):
+    """An admitted request may never be dropped: a batch whose sort raises
+    is failsink-retried (a solo batch gets one re-dispatch) inside the same
+    flush — no exception escapes to innocent submitters, and the retried
+    result carries the failsink telemetry mark."""
+    import repro.service.dispatch as disp_mod
 
     svc = SortService(
         ServiceConfig(p=8, max_batch_keys=100), executor=SortExecutor()
     )
-    rid_a = svc.submit(np.arange(80, dtype=np.int32)[::-1].copy())
-    rid_b = svc.submit(np.arange(90, dtype=np.int32)[::-1].copy())
+    fut_a = svc.submit(np.arange(80, dtype=np.int32)[::-1].copy())
+    fut_b = svc.submit(np.arange(90, dtype=np.int32)[::-1].copy())
     calls = {"n": 0}
-    orig = svc_mod.segmented_sort_safe
+    orig = disp_mod.segmented_sort_launch
 
     def failing(*args, **kw):
         calls["n"] += 1
@@ -272,16 +279,16 @@ def test_flush_requeues_admitted_requests_on_batch_failure(monkeypatch):
             raise RuntimeError("boom")
         return orig(*args, **kw)
 
-    monkeypatch.setattr(svc_mod, "segmented_sort_safe", failing)
-    with pytest.raises(RuntimeError):
-        svc.flush()  # batch 1 (rid_a) completes, batch 2 (rid_b) raises
-    assert svc.pending == 1  # rid_b is back in the queue, not lost
-    monkeypatch.setattr(svc_mod, "segmented_sort_safe", orig)
-    out = svc.flush()
-    assert set(out) == {rid_a, rid_b}  # earlier completion + the retry
-    assert np.array_equal(
-        svc.take_result(rid_b).keys, np.arange(90, dtype=np.int32)
-    )
+    monkeypatch.setattr(disp_mod, "segmented_sort_launch", failing)
+    out = svc.flush()  # batch 2 (fut_b) raises once, retries solo, lands
+    assert set(out) == {fut_a.rid, fut_b.rid}  # nobody lost, nobody raised
+    assert svc.dispatcher.failsink_solo_retries == 1
+    assert svc.dispatcher.failsink_errors == 0
+    res_b = svc.take_result(fut_b)
+    assert res_b.failsink and fut_b.failsink  # rode the failsink re-dispatch
+    assert np.array_equal(res_b.keys, np.arange(90, dtype=np.int32))
+    res_a = svc.take_result(fut_a)
+    assert not res_a.failsink  # the innocent batch never saw the failsink
 
 
 def test_length_bucketed_order_rejects_mismatched_service_p():

@@ -72,6 +72,8 @@ def main() -> None:
     go("capacity", tables.table_capacity_retry, M // 4 if not args.full else 4 * M,
        p=16 if not args.full else 64)
     go("hotpath", tables.table_hotpath, M // 16 if not args.full else M, p=8)
+    go("radix", tables.table_radix, M // 16 if not args.full else M,
+       p=8 if not args.full else 16)
     go("service", tables.table_service, n_requests=64,
        total=M // 16 if not args.full else M, p=8 if not args.full else 16)
     go("planner", tables.table_planner, n_requests=64,

@@ -556,6 +556,91 @@ def table_hotpath(n, p=8, mixes=("U", "G", "B", "DD", "zipf")):
                     )
 
 
+def table_radix(n, p=16, repeats=4):
+    """Count-then-distribute radix route vs the sampling route, per key mix.
+
+    Both sides run through the overflow-safe driver so the walls include
+    the real production cost of each route: the sample side pays the
+    splitter superstep plus any w.h.p. capacity retries; the radix side
+    pays one counting pass and a small host read of the exact boundary
+    matrix, then routes through a single exact-capacity rung.
+
+    Mixes pick the regimes the route selector cares about: ``dense_int``
+    (domain = 4·p — few distinct values per splitter bucket, so sampled
+    splitters quantize badly and the w.h.p. capacity faults) and
+    ``expert_id`` (domain = p — MoE dispatch keys) are the radix home
+    turf; ``U``/``U64`` are balanced wide-range keys where both routes
+    run clean and the sides break even (the skipped splitter superstep
+    is small on the simulated-processor substrate) — break-even at wide
+    domains is the ``U`` row's documentation, not a regression; and
+    ``zipf_skew`` is adversarial for range bucketing
+    (heavy mass at small keys lands in one radix bucket, so the exact
+    capacity approaches the full buffer — the planner routes such batches
+    to sample; the row documents why). ``retries_radix`` is an identity
+    column: the radix route cannot overflow, so any nonzero value is a
+    structural failure, not a slow run. ``complete`` likewise.
+    """
+    n_p = n // p
+    rng = np.random.default_rng(21)
+    mixes = {
+        "dense_int": datagen.dense_int(p, n_p, seed=21, domain=4 * p),
+        "expert_id": datagen.dense_int(p, n_p, seed=22, domain=p),
+        "U": datagen.generate("U", p, n_p, seed=21),
+        "U64": rng.integers(-(2**62), 2**62, (p, n_p), dtype=np.int64),
+        "zipf_skew": datagen.generate("zipf", p, n_p, seed=21),
+    }
+    from jax.experimental import enable_x64
+
+    for mix, xs in mixes.items():
+        scope = enable_x64 if xs.dtype == np.int64 else _null_scope
+        with scope():
+            x = jnp.asarray(xs)
+
+            def timed(cfg):
+                bsp_sort_safe(x, cfg)  # warm: compile every rung visited
+                ts, st = [], None
+                for _ in range(repeats):
+                    st = TierStats()
+                    t0 = time.time()
+                    res, _, st = bsp_sort_safe(x, cfg, stats=st)
+                    ts.append(time.time() - t0)
+                return float(np.min(ts)), res, st
+
+            t_r, res_r, st_r = timed(
+                SortConfig(p=p, n_per_proc=n_p, routing="a2a_dense",
+                           route="radix", pair_capacity="exact")
+            )
+            t_s, res_s, st_s = timed(
+                SortConfig(p=p, n_per_proc=n_p, routing="a2a_dense",
+                           pair_capacity="whp")
+            )
+            ref = np.sort(np.asarray(xs).reshape(-1))
+            ok = np.array_equal(gathered_output(res_r), ref) and np.array_equal(
+                gathered_output(res_s), ref
+            )
+            emit(
+                "radix",
+                {"mix": mix, "n": n, "p": p,
+                 "wall_radix_s": round(t_r, 4),
+                 "wall_sample_s": round(t_s, 4),
+                 "speedup": round(t_s / max(t_r, 1e-9), 2),
+                 "retries_radix": st_r.retries,
+                 "retries_sample": st_s.retries,
+                 "served_by_sample": st_s.last_tier,
+                 "complete": ok},
+            )
+
+
+class _null_scope:
+    """No-op stand-in for ``enable_x64`` on 32-bit mixes."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
 def table_duplicate_handling_overhead(n, p=64):
     """§6.1: duplicate handling costs 3-6%; compare [U] vs all-duplicates."""
     fn, cfg = _sort_fn(p, n // p, algorithm="det", local_sort="lax")

@@ -26,11 +26,20 @@ drift (row count, identity mismatch, new/missing tables) exits 2 so a
 reshaped benchmark fails loudly instead of silently passing.
 
 Exit codes: 0 clean · 1 regression · 2 structural mismatch / bad input.
+
+``--allow-missing-baseline`` is the bootstrap escape: a brand-new table has
+no committed baseline yet, and without the flag that reads as structural
+failure (exit 2) — the right behaviour once a baseline exists, but a
+chicken-and-egg block when wiring a new table into CI in the same change
+that first produces it. With the flag, a *missing baseline file* prints a
+note and exits 0 (the fresh file still has to parse); every other
+structural problem still exits 2.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import Dict, List, Optional, Tuple
 
@@ -130,7 +139,26 @@ def main(argv=None) -> int:
         "--list", action="store_true",
         help="also print rows that stayed within tolerance",
     )
+    ap.add_argument(
+        "--allow-missing-baseline", action="store_true",
+        help="exit 0 (with a note) when the baseline file does not exist — "
+        "for wiring a brand-new table into CI before its first committed "
+        "baseline",
+    )
     args = ap.parse_args(argv)
+
+    if args.allow_missing_baseline and not os.path.exists(args.baseline):
+        try:
+            ftab, frows = load_rows(args.fresh)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"bench_diff: {e}", file=sys.stderr)
+            return 2
+        print(
+            f"bench_diff: no baseline at {args.baseline} — skipping "
+            f"({ftab}: {len(frows)} fresh rows; commit the fresh file to "
+            f"start gating)"
+        )
+        return 0
 
     try:
         btab, brows = load_rows(args.baseline)

@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
 # Quick verification loop (~4 min): the fast-marked tier-1 subset, a
 # one-batch capacity-planner smoke (fingerprint → segment-aware bound →
-# planned-tier fused sort → persisted history round-trip), and the perf
-# gates — the `hotpath` and `soak` benchmark tables regenerated from
-# seeded inputs and diffed against the committed baselines
-# (benchmarks/baselines/): HLO collective counts, pipeline saturation
-# (in_flight_peak/overlapped) and other identity fields must match
+# planned-tier fused sort → persisted history round-trip, plus a
+# balanced dense-int batch that must take the radix route with zero
+# retries), and the perf gates — the `hotpath`, `soak` and `radix`
+# benchmark tables regenerated from seeded inputs and diffed against
+# the committed baselines (benchmarks/baselines/): HLO collective
+# counts, pipeline saturation (in_flight_peak/overlapped), the radix
+# table's zero-retry guarantee and other identity fields must match
 # exactly, walls within a generous shared-core tolerance and the soak
 # p99 under bench_diff's looser percentile gate. Set SKIP_BENCH=1 to
 # skip the perf gates (e.g. on a loaded machine).
@@ -18,13 +20,16 @@ python -m pytest -m fast -q
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   tmp="$(mktemp -d)"
   trap 'rm -rf "$tmp"' EXIT
-  python -m benchmarks.run --tables hotpath,soak --json "$tmp" > /dev/null
+  python -m benchmarks.run --tables hotpath,soak,radix --json "$tmp" > /dev/null
   python scripts/bench_diff.py \
     benchmarks/baselines/BENCH_hotpath.json "$tmp/BENCH_hotpath.json" \
     --tol 0.6
   python scripts/bench_diff.py \
     benchmarks/baselines/BENCH_soak.json "$tmp/BENCH_soak.json" \
     --tol 0.6
+  python scripts/bench_diff.py \
+    benchmarks/baselines/BENCH_radix.json "$tmp/BENCH_radix.json" \
+    --tol 0.6 --allow-missing-baseline
 fi
 
 python - <<'EOF'
@@ -50,5 +55,18 @@ with tempfile.TemporaryDirectory() as d:
     fp = fingerprint_arrays(arrays, 8)
     reloaded = CapacityPlanner(path=path)  # history round-trip
     assert bucket_key(fp) in reloaded.history, reloaded.history
-    print("planner smoke: planned-tier fused sort + history round-trip OK")
+
+    # balanced dense-int batch: the planner must pick the radix route —
+    # one exact-capacity rung, zero retries by construction
+    dense = [datagen.dense_int(1, 256, seed=40 + i, domain=32)[0]
+             for i in range(16)]
+    svc2 = SortService(ServiceConfig(p=8, planner_path=path),
+                       executor=SortExecutor())
+    r2 = svc2.sort_many(dense)
+    assert all(np.array_equal(r.keys, np.sort(a))
+               for a, r in zip(dense, r2)), "radix fused sort mismatch"
+    assert r2[0].tier == "radix", r2[0].tier
+    assert svc2.stats.retries == 0, svc2.stats.as_row()
+    print("planner smoke: planned-tier fused sort + radix route + "
+          "history round-trip OK")
 EOF

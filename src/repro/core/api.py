@@ -105,6 +105,7 @@ from .bitonic import sort_bitonic_spmd
 from .local_sort import local_sort
 from .sort_det import prepare_det_spmd, route_det_spmd, sort_det_spmd
 from .sort_iran import prepare_iran_spmd, route_iran_spmd, sort_iran_spmd
+from .sort_radix import prepare_radix_spmd, route_radix_spmd, sort_radix_spmd
 from .sort_ran import prepare_ran_spmd, route_ran_spmd, sort_ran_spmd
 from .types import AXIS, PreparedSort, SortConfig, SortResult
 
@@ -136,20 +137,31 @@ _PIPELINES = {
 
 
 def spmd_sort_fn(cfg: SortConfig) -> Callable:
-    """The per-processor SPMD sort body for ``cfg.algorithm``."""
+    """The per-processor SPMD sort body for ``cfg``.
+
+    ``route="radix"`` selects the count-then-distribute pipeline
+    (``sort_radix.py``) regardless of ``algorithm`` — the distribution
+    route replaces Ph3..Ph4, not the Ph2 local method.
+    """
     cfg.validate()
+    if cfg.route == "radix":
+        return functools.partial(sort_radix_spmd, cfg=cfg)
     return functools.partial(_ALGOS[cfg.algorithm], cfg=cfg)
 
 
 def spmd_prepare_fn(cfg: SortConfig) -> Callable:
-    """The tier-invariant prepare stage for ``cfg.algorithm``."""
+    """The tier-invariant prepare stage for ``cfg``."""
     cfg.validate()
+    if cfg.route == "radix":
+        return functools.partial(prepare_radix_spmd, cfg=cfg)
     return functools.partial(_PIPELINES[cfg.algorithm][0], cfg=cfg)
 
 
 def spmd_route_fn(cfg: SortConfig) -> Callable:
-    """The tier-dependent route stage for ``cfg.algorithm``."""
+    """The tier-dependent route stage for ``cfg``."""
     cfg.validate()
+    if cfg.route == "radix":
+        return functools.partial(route_radix_spmd, cfg=cfg)
     return functools.partial(_PIPELINES[cfg.algorithm][1], cfg=cfg)
 
 
@@ -358,7 +370,12 @@ class SortExecutor:
 
     # ---------------------------------------------------- sharded runner
     def _prep_specs(self, cfg: SortConfig, mesh_axis: str, n_values: int):
-        splits_spec = (P(mesh_axis),) * 3 if cfg.algorithm == "det" else None
+        if cfg.route == "radix":
+            splits_spec = (P(mesh_axis),)  # counted (p+1,) boundaries
+        elif cfg.algorithm == "det":
+            splits_spec = (P(mesh_axis),) * 3
+        else:
+            splits_spec = None
         return PreparedSort(
             xs=P(mesh_axis), vals=(P(mesh_axis),) * n_values, splits=splits_spec
         )
@@ -565,6 +582,44 @@ def _escalate(
     return InFlightSort(ladder, rng, stats, run_tier).wait()
 
 
+def _radix_exact_ladder(cfg: SortConfig, prep: PreparedSort) -> tuple:
+    """The radix route's whole ladder: ONE rung at the host-counted capacity.
+
+    ``prep.splits[0]`` carries the counted (p, p+1) bucket boundaries, so
+    the true per-(src,dst) maximum and the true receive total are known
+    *before any data moves* — a (p², ) int32 host read (the launch path's
+    only extra sync; the boundaries were computed by prepare anyway). Both
+    bounds are quantized up to ~16 octave steps (a relative 1/16 grid, so
+    a balanced batch's pair capacity stays within ~6% of the true n_p/p
+    count instead of rounding to a coarse absolute step) — nearby batches
+    share compiled route programs while distinct capacities stay
+    logarithmic in n_p. Then clamped to the exact-tier sizes — the rung
+    can never exceed what ``pair_capacity="exact"`` + ``n_max_mode="full"``
+    would have allocated, and since cap ≥ true count on every pair,
+    overflow (and hence any retry) is impossible.
+    """
+    bounds = np.asarray(prep.splits[0])  # (p, p+1): one row per source
+    sendc = np.diff(bounds, axis=1)  # counts[src, dst]
+    pair_true = int(sendc.max())
+    recv_true = int(sendc.sum(axis=0).max())
+
+    def _quant(true, hi):
+        step = max(cfg.pad_align, 1 << max(0, true.bit_length() - 4))
+        return min(hi, -(-max(true, 1) // step) * step)
+
+    qpair = _quant(pair_true, cfg.n_per_proc)
+    qrecv = _quant(recv_true, cfg.n)
+    tier = dataclasses.replace(
+        cfg,
+        pair_capacity="planned",
+        pair_cap_override=qpair,
+        capacity_factor=1.0,
+        n_max_mode="bound",
+        n_max_override=qrecv,
+    )
+    return (("radix", tier),)
+
+
 def bsp_sort_safe_launch(
     x: jnp.ndarray,
     cfg: Optional[SortConfig] = None,
@@ -631,13 +686,18 @@ def bsp_sort_safe_launch(
             )
 
     else:
-        # Ph2 (+ det Ph3), exactly once — inside the scope: the prepare
-        # stage consumes the (possibly int64) input directly
+        # Ph2 (+ det Ph3, or the radix counting pass), exactly once — inside
+        # the scope: the prepare stage consumes the (possibly int64) input
+        # directly
         if scope is not None:
             with scope():
                 prep = ex.prepare_vmap(cfg, nv)(x, *values)
         else:
             prep = ex.prepare_vmap(cfg, nv)(x, *values)
+        if cfg.route == "radix":
+            # counts are in hand: collapse the ladder to one rung sized to
+            # the true maxima — zero retries by construction
+            ladder = _radix_exact_ladder(cfg, prep)
 
         def run_tier(tier_cfg, tier_rng):
             fn = ex.route_vmap(tier_cfg, nv)
@@ -726,13 +786,16 @@ def bsp_sort_sharded_safe(
         return _escalate(cfg.tier_ladder(), rng, stats, run_tier)
 
     prep = ex.prepare_sharded(cfg, mesh, mesh_axis, nv)(x, *values)
+    ladder = cfg.tier_ladder()
+    if cfg.route == "radix":
+        ladder = _radix_exact_ladder(cfg, prep)
 
     def run_tier(tier_cfg, tier_rng):
         fn = ex.route_sharded(tier_cfg, mesh, mesh_axis, nv)
         buf, vbufs, count, overflow = fn(prep, jax.random.key_data(tier_rng))
         return SortResult(buf=buf, count=count, overflow=overflow.any()), list(vbufs)
 
-    return _escalate(cfg.tier_ladder(), rng, stats, run_tier)
+    return _escalate(ladder, rng, stats, run_tier)
 
 
 def gathered_output(result: SortResult) -> np.ndarray:

@@ -4,7 +4,7 @@ Seven generators producing the (p, n_per_proc) int32 global layout. The
 paper's [Z]/[RD] sets are omitted by the paper's own choice (§6.3: results
 match [DD]/[WR] and are never worse than [U]).
 
-Two service-workload additions beyond the paper's sets (the sort-service
+Service-workload additions beyond the paper's sets (the sort-service
 benchmark sorts *many small requests*, a regime §6.3 never exercises):
 
 * ``zipf`` / :func:`zipf_keys` — duplicate-heavy Zipf-distributed keys
@@ -12,7 +12,9 @@ benchmark sorts *many small requests*, a regime §6.3 never exercises):
   duplicate-tagging stress in its naturally occurring form);
 * :func:`zipf_sizes` — skewed *request-size* mix for a batch of concurrent
   sort requests (sizes ∝ rank^-alpha: a few big requests, a long tail of
-  tiny ones — the fusion win case).
+  tiny ones — the fusion win case);
+* ``dense_int`` / :func:`dense_int` — small-domain integer keys
+  (expert-id-like), the count-then-distribute ``route="radix"`` flagship.
 
 INT_MAX = 2^31 (values in [0, 2^31 - 1], 32-bit signed — paper's setting).
 """
@@ -135,6 +137,21 @@ def zipf_keys(p: int, n_p: int, seed: int = 0, alpha: float = 1.5) -> np.ndarray
     ).astype(np.int32)
 
 
+def dense_int(p: int, n_p: int, seed: int = 0, domain: int = 64) -> np.ndarray:
+    """[dense_int] — small-domain integer keys, uniform in [0, domain).
+
+    The expert-id-like workload of MoE dispatch and segment tags: every key
+    is drawn from a tiny dense domain, so *all* high bits agree and
+    duplicates dominate (each value repeats ~n/domain times). Sampling-based
+    splitter selection pays its full Ph3 cost to learn a range a single
+    counting pass reads off directly — the flagship case for
+    ``route="radix"``.
+    """
+    return np.stack(
+        [r.integers(0, domain, n_p, dtype=np.int64) for r in _rngs(p, seed)]
+    ).astype(np.int32)
+
+
 def zipf_sizes(
     n_requests: int, total: int, seed: int = 0, alpha: float = 1.2
 ) -> np.ndarray:
@@ -177,6 +194,7 @@ DISTRIBUTIONS = {
     "DD": deterministic_duplicates,
     "WR": worst_regular,
     "zipf": zipf_keys,
+    "dense_int": dense_int,
 }
 
 

@@ -331,6 +331,12 @@ def segmented_sort_launch(
     receive side is still the Claim 5.1 bound; a batch that overflows it
     (however skewed) escalates to the allgather terminal tier instead of
     dropping keys.
+
+    Int-key fused batches can pass ``route="radix"`` instead (the planner
+    does, for balanced key ranges): the segment-tag composite is itself a
+    dense-int prefix, so the count-then-distribute route buckets the batch
+    by segment runs, sizes its ONE rung from the exact counted totals, and
+    never retries — no oversampling parameter, no splitter superstep.
     """
     if cfg is None:
         cfg = SortConfig(

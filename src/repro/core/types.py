@@ -87,6 +87,12 @@ class SortConfig:
     p: int
     n_per_proc: int
     algorithm: str = "det"  # det | iran | ran | bitonic
+    # Distribution route: "sample" (Ph3 splitters from oversampling — the
+    # paper's schemes) or "radix" (count-then-distribute: one counting pass
+    # over the locally sorted run yields exact per-destination boundaries,
+    # so Ph3 is skipped entirely, capacity is known before any data moves,
+    # and the tier ladder collapses to a single rung with zero retries).
+    route: str = "sample"
     omega: Optional[float] = None
     local_sort: str = "lax"
     merge: str = "sort"
@@ -113,6 +119,11 @@ class SortConfig:
     # receive-buffer sizing: "bound" (Lemma/Claim 5.1 × capacity_factor) or
     # "full" (= n — nothing can ever overflow; the ladder's terminal tier).
     n_max_mode: str = "bound"
+    # route="radix": the exact receive bound the launch driver host-computed
+    # from the counted per-destination totals (keys, pre-alignment).
+    # Tier-only — normalised away by ``prepare_key`` like the capacity
+    # fields. Overrides the Lemma/Claim 5.1 formula when set.
+    n_max_override: Optional[int] = None
     seed: int = 0
 
     # ------------------------------------------------------------------ math
@@ -164,6 +175,13 @@ class SortConfig:
         """
         if self.n_max_mode == "full":
             return round_up(self.n, self.pad_align)
+        if self.n_max_override is not None:
+            # exact host-counted receive total (radix route) — no
+            # capacity_factor: the count is a bound, not an estimate.
+            return min(
+                round_up(self.n_max_override, self.pad_align),
+                max(self.n, self.pad_align),
+            )
         if self.algorithm == "det":
             bound = (self.s + self.p - 1) * self.segment_len
         else:
@@ -214,6 +232,28 @@ class SortConfig:
         """
         if self.algorithm == "bitonic":
             return (("exact", self),)
+        if self.route == "radix":
+            # Count-then-distribute: capacity is KNOWN before sending, so the
+            # ladder is one rung by construction. With a host-counted bound
+            # (pair_cap_override + n_max_override, set by the launch driver
+            # after reading the prepared boundaries) the rung runs at the
+            # exact counted capacity; without one — direct calls that never
+            # host-sync — it runs at pair_cap = n/p with a full receive
+            # buffer, which no send pattern can overflow either way.
+            if self.pair_capacity == "planned" and self.pair_cap_override:
+                return (("radix", self),)
+            return (
+                (
+                    "radix",
+                    dataclasses.replace(
+                        self,
+                        pair_capacity="exact",
+                        pair_cap_override=None,
+                        n_max_mode="full",
+                        n_max_override=None,
+                    ),
+                ),
+            )
         tiers = []
         if (
             self.routing == "a2a_dense"
@@ -278,10 +318,15 @@ class SortConfig:
             pair_cap_override=None,
             routing="a2a_dense",
             n_max_mode="bound",
+            n_max_override=None,
             merge="sort",
             merge_backend="xla",
             exchange="fused",
-            omega=self.omega if self.algorithm == "det" else None,
+            # radix prepare is a counting pass — no Ph3 sample, so it is
+            # omega-independent even for det.
+            omega=self.omega
+            if (self.algorithm == "det" and self.route == "sample")
+            else None,
         )
 
     def validate(self) -> None:
@@ -303,6 +348,16 @@ class SortConfig:
             raise ValueError(f"unknown merge_backend {self.merge_backend!r}")
         if self.pair_capacity == "planned" and not self.pair_cap_override:
             raise ValueError("pair_capacity='planned' needs pair_cap_override")
+        if self.route not in ("sample", "radix"):
+            raise ValueError(f"unknown route {self.route!r}")
+        if self.route == "radix":
+            if self.algorithm == "bitonic":
+                raise ValueError("route='radix' does not apply to bitonic")
+            if self.routing != "a2a_dense":
+                raise ValueError(
+                    "route='radix' requires routing='a2a_dense' "
+                    f"(got {self.routing!r})"
+                )
 
 
 @dataclasses.dataclass
@@ -346,7 +401,11 @@ class PreparedSort:
 
     xs: jnp.ndarray  # local run (sorted for det/iran, raw for ran/bitonic)
     vals: Tuple[jnp.ndarray, ...]  # payloads permuted like xs
-    splits: Optional[tuple]  # det: tagged (keys, procs, idxs) splitters
+    # det: tagged (keys, procs, idxs) splitters.
+    # route="radix": a 1-tuple holding the counted (p+1,) bucket boundaries
+    # of the local run — exact, tier-invariant, and host-readable, which is
+    # what lets the launch driver size the single rung to the true counts.
+    splits: Optional[tuple]
 
 
 jax.tree_util.register_pytree_node(

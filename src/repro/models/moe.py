@@ -32,6 +32,13 @@ dropping tokens, with per-tier attempts recorded in a shared
 :class:`repro.core.TierStats`. (Inside a jitted train step there is no host
 sync, so the training path keeps the fixed-capacity body and surfaces
 ``aux['overflow']`` for the metrics loop.)
+
+``moe_ep_safe(route="radix")`` drops the guesswork entirely: expert ids are
+small dense integers, so a router-only counting pass (:func:`moe_ep_counts`)
+yields the exact per-(src, dst) record counts, and the single dispatch runs
+with a receive buffer bounded by the true maximum count — the MoE face of
+``SortConfig(route="radix")``'s count-then-distribute h-relation. Zero
+retries by construction, and never the ``full``-tier p·n worst case.
 """
 from __future__ import annotations
 
@@ -199,12 +206,19 @@ def moe_ep(
     cfg: ArchConfig,
     mesh_info: MoEMeshInfo,
     capacity_factor=1.25,
+    pair_cap_override: Optional[int] = None,
 ):
     """Expert-parallel MoE via the BSP routing machinery under shard_map.
 
     x: (B, S, D) — B sharded over data axes, S sharded over the model axis
     (so all 256 devices hold distinct tokens), D replicated. Expert weights
     (E, D, F) sharded on E over the model axis.
+
+    ``pair_cap_override`` pins the per-(src,dst) row capacity directly —
+    the count-then-distribute ``route="radix"`` path of :func:`moe_ep_safe`
+    host-reads the true per-destination counts first and passes their
+    (quantized) maximum here, so the dispatch buffer is bounded by what the
+    router actually routed instead of a ``capacity_factor`` guess.
     """
     p = mesh_info.model_size
     E, k = cfg.moe_experts, cfg.moe_top_k
@@ -223,7 +237,10 @@ def moe_ep(
         probs, experts, aux = _router(x2d, router_w, k)
 
         n = t_loc * k
-        pair_cap = int(-(-n * capacity_factor // p))
+        if pair_cap_override is not None:
+            pair_cap = min(int(pair_cap_override), n)
+        else:
+            pair_cap = int(-(-n * capacity_factor // p))
         cap = p * pair_cap
 
         # paper step 9: stable integer sort of records by expert id
@@ -317,6 +334,46 @@ def _dp_spec(mesh_info: MoEMeshInfo, batch: int):
     return mesh_info.data_axes if batch % n == 0 else None
 
 
+def moe_ep_counts(params: Dict, x: jnp.ndarray, cfg: ArchConfig, mesh_info: MoEMeshInfo):
+    """Count-only routing pass for the radix EP route.
+
+    Runs just the router (a (T, D)·(D, E) GEMM — a sliver of the FFN cost)
+    and tallies records per destination shard, returning the replicated
+    global maximum per-(src, dst) count as a scalar. This is the MoE
+    analogue of the sort's count-then-distribute route: expert ids are
+    small dense ints, so one counting pass yields the exact dispatch
+    capacity and there is nothing to sample or to guess.
+    """
+    p = mesh_info.model_size
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    assert E % p == 0, "EP path requires experts divisible by the model axis"
+    e_loc = E // p
+    axis = mesh_info.model_axis
+    all_axes = (
+        tuple(mesh_info.data_axes) + (axis,) if mesh_info.mesh is not None else (axis,)
+    )
+
+    def body(xl, router_w):
+        x2d = xl.reshape(-1, xl.shape[-1])
+        _, experts, _ = _router(x2d, router_w, k)
+        dest = experts.reshape(-1) // e_loc
+        counts = jnp.zeros((p,), jnp.int32).at[dest].add(1)
+        return lax.pmax(counts.max(), all_axes)
+
+    if mesh_info.mesh is None:
+        return jax.vmap(lambda xl: body(xl, params["router"]), axis_name=axis)(
+            x[None]
+        )[0]
+    dp = _dp_spec(mesh_info, x.shape[0])
+    seq = axis if x.shape[1] % mesh_info.model_size == 0 else None
+    return shard_map(
+        body,
+        mesh=mesh_info.mesh,
+        in_specs=(P(dp, seq, None), P()),
+        out_specs=P(),
+    )(x, params["router"])
+
+
 def moe_capacity_ladder(capacity_factor: float, p: int) -> tuple:
     """EP dispatch capacity tiers, mirroring ``SortConfig.tier_ladder``.
 
@@ -338,12 +395,29 @@ def moe_capacity_ladder(capacity_factor: float, p: int) -> tuple:
 _EP_JIT_CACHE: Dict[tuple, object] = {}
 
 
-def _moe_ep_jitted(cfg: ArchConfig, mesh_info: MoEMeshInfo, capacity_factor: float):
-    key = (cfg, mesh_info, float(capacity_factor))
+def _moe_ep_jitted(
+    cfg: ArchConfig,
+    mesh_info: MoEMeshInfo,
+    capacity_factor: float,
+    pair_cap: Optional[int] = None,
+):
+    key = (cfg, mesh_info, float(capacity_factor), pair_cap)
     fn = _EP_JIT_CACHE.get(key)
     if fn is None:
         fn = _EP_JIT_CACHE[key] = jax.jit(
-            lambda p, x: moe_ep(p, x, cfg, mesh_info, capacity_factor)
+            lambda p, x: moe_ep(
+                p, x, cfg, mesh_info, capacity_factor, pair_cap_override=pair_cap
+            )
+        )
+    return fn
+
+
+def _moe_ep_counts_jitted(cfg: ArchConfig, mesh_info: MoEMeshInfo):
+    key = ("counts", cfg, mesh_info)
+    fn = _EP_JIT_CACHE.get(key)
+    if fn is None:
+        fn = _EP_JIT_CACHE[key] = jax.jit(
+            lambda p, x: moe_ep_counts(p, x, cfg, mesh_info)
         )
     return fn
 
@@ -356,6 +430,7 @@ def moe_ep_safe(
     capacity_factor: float = 1.25,
     stats: Optional[TierStats] = None,
     planner=None,
+    route: str = "sample",
 ) -> Tuple[jnp.ndarray, Dict, TierStats]:
     """Overflow-safe EP dispatch: escalate the capacity tier on token drop.
 
@@ -367,12 +442,36 @@ def moe_ep_safe(
     evaluation time (top-level calls with a host sync per layer); the jitted
     train step keeps the fixed-capacity :func:`moe_ep`.
 
+    ``route="radix"`` replaces the guess-and-retry ladder with
+    count-then-distribute: one cheap router-only pass
+    (:func:`moe_ep_counts`) host-reads the true maximum per-(src, dst)
+    record count, and the dispatch runs exactly once with the receive
+    buffer bounded by that count (quantized to octave steps so the jit
+    cache stays bounded). No ``capacity_factor`` guess, no ``whp`` rungs,
+    no ``full``-tier p·n fallback — overflow is impossible by
+    construction, so radix batches always report zero retries.
+
     ``planner`` (a :class:`repro.planner.CapacityPlanner`) is an optional
     traffic-learned policy over the same ladder: a model whose router
     keeps dropping tokens at the ``whp`` guess stops paying the doomed
-    attempt and starts at the rung that empirically serves.
+    attempt and starts at the rung that empirically serves. (The radix
+    route has a single rung, so the planner has nothing to learn there.)
     """
     stats = stats if stats is not None else TierStats()
+    if route == "radix":
+        # one host sync: the true max records any (src, dst) pair carries
+        pair_true = int(_moe_ep_counts_jitted(cfg, mesh_info)(params, x))
+        # quantize up to ~16 steps per octave: bounds distinct compiled
+        # programs while staying within 1/16th of the exact bound
+        step = max(8, 1 << max(0, pair_true.bit_length() - 4))
+        qpair = -(-max(pair_true, 1) // step) * step
+        y, aux = _moe_ep_jitted(cfg, mesh_info, 1.0, pair_cap=qpair)(params, x)
+        if bool(aux["overflow"]):  # caps >= true counts: unreachable
+            raise RuntimeError(
+                "radix EP dispatch overflowed its counted capacity"
+            )
+        stats.record("radix", True)
+        return y, aux, stats
     ladder = moe_capacity_ladder(capacity_factor, mesh_info.model_size)
     n_rungs, bucket = len(ladder), None
     if planner is not None and n_rungs > 1:

@@ -4,11 +4,14 @@ traffic-learned tier selection for the BSP sort service.
 Data flow (see README.md in this package):
 
     fingerprint.py   sort-free workload summary (sizes, lane segment
-                     spread, sampled duplicate fractions) + bucket keys
+                     spread, sampled duplicate fractions, key dtype +
+                     sampled range/balance) + bucket keys
     capacity.py      segment-aware w.h.p. pair-capacity bound for striped
                      fused batches; solves for the oversampling ratio
-    planner.py       CapacityPlanner: bucket → (starting tier, ω) with
-                     JSON-persisted fault-rate feedback
+    planner.py       CapacityPlanner: bucket → (route, starting tier, ω)
+                     with JSON-persisted fault-rate feedback; balanced
+                     integer-key batches take route="radix"
+                     (count-then-distribute, single exact-capacity rung)
 
 Consumers: ``repro.service.SortService`` (the ``pair_capacity="auto"``
 resolution), and the optional ``planner=`` policy hooks of
@@ -20,7 +23,9 @@ from .fingerprint import (
     bucket_key,
     fingerprint_arrays,
     lane_spread,
+    radix_share,
     sampled_dup_fraction,
+    sampled_range_bits,
 )
 from .planner import CapacityPlanner, PlanDecision
 
@@ -32,7 +37,9 @@ __all__ = [
     "fingerprint_arrays",
     "lane_spread",
     "planned_cap_for",
+    "radix_share",
     "sampled_dup_fraction",
+    "sampled_range_bits",
     "segment_aware_pair_cap",
     "solve_omega",
 ]

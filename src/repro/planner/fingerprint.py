@@ -17,7 +17,17 @@ quantities that cost o(n·log n) to compute:
   the stable pipeline), so a lane's copies of one value concentrate into
   one routing bucket; the segment-aware capacity bound
   (``planner.capacity``) inflates per-segment contributions by this
-  fraction.
+  fraction;
+* **key dtype + sampled key-range shape** — whether the keys are integers
+  (``int_key``), how many bits span the sampled value range
+  (``key_range_bits``), and the estimated busiest-bucket share under
+  range-normalized p-bucketing (``radix_share``). These drive the
+  *route* decision: integer keys whose mass spreads evenly over their
+  observed range (dense expert-id-like domains, uniform draws, fused
+  multi-segment composites — their dense segment-id prefix dominates the
+  bucketing) take the count-then-distribute ``route="radix"`` path and
+  skip the splitter superstep entirely; skewed ranges (zipf heads) stay
+  on the sample route whose splitters adapt to the mass.
 
 Fingerprints quantize into **buckets** (:func:`bucket_key`): pow2 segment
 count, coarse duplicate level, exact (p, n_per_proc) shape. Buckets are the
@@ -49,6 +59,9 @@ class Fingerprint:
     lane_spread_max: int  # segments overlapping the busiest contiguous lane
     lane_spread_mean: float
     dup_fractions: Tuple[float, ...]  # sampled per-segment top-value share
+    int_key: bool = True  # integer key dtype (radix route applicability)
+    key_range_bits: int = 31  # bits spanning the sampled value range
+    radix_share: float = 1.0  # est. busiest range-bucket share (1.0 = worst)
 
     @property
     def n_segments(self) -> int:
@@ -67,6 +80,15 @@ class Fingerprint:
         return self.p * self.n_per_proc - self.n_keys
 
 
+def _sampled(keys: np.ndarray, sample: int, seed: int) -> np.ndarray:
+    """``min(len, sample)`` keys drawn by a deterministic rng."""
+    n = int(keys.shape[0])
+    if n <= sample:
+        return np.asarray(keys)
+    idx = np.random.default_rng(seed).choice(n, size=sample, replace=False)
+    return np.asarray(keys)[idx]
+
+
 def sampled_dup_fraction(
     keys: np.ndarray, sample: int = DUP_SAMPLE, seed: int = 0
 ) -> float:
@@ -77,16 +99,55 @@ def sampled_dup_fraction(
     for capacity planning (the Monte-Carlo test in tests/test_planner.py
     checks the *bound built on it*, not the estimator in isolation).
     """
-    n = int(keys.shape[0])
-    if n == 0:
+    pick = _sampled(keys, sample, seed)
+    if pick.size == 0:
         return 0.0
-    if n <= sample:
-        pick = np.asarray(keys)
-    else:
-        idx = np.random.default_rng(seed).choice(n, size=sample, replace=False)
-        pick = np.asarray(keys)[idx]
     _, counts = np.unique(pick, return_counts=True)
     return float(counts.max() / pick.size)
+
+
+def sampled_range_bits(samples: Sequence[np.ndarray]) -> int:
+    """Bits spanning the global sampled key range (0 = single value)."""
+    nonempty = [s for s in samples if s.size]
+    if not nonempty:
+        return 0
+    lo = min(int(s.min()) for s in nonempty)
+    hi = max(int(s.max()) for s in nonempty)
+    return int(hi - lo).bit_length()
+
+
+def radix_share(
+    samples: Sequence[np.ndarray], sizes: Sequence[int], p: int
+) -> float:
+    """Estimated busiest-bucket share under range-normalized p-bucketing.
+
+    This is the balance the ``route="radix"`` destination function
+    (``core.sort_radix.radix_boundaries``) would achieve — 1/p is perfect,
+    1.0 aims everything at one processor (still *correct* under radix, the
+    capacity is exact either way, but the busiest proc serializes the
+    merge). Single-segment batches estimate it from the sampled raw keys;
+    fused multi-segment batches from the segment sizes alone — the
+    composite's dense segment-id prefix dominates the range, so buckets are
+    runs of ``⌈R/p⌉`` consecutive segments (a conservative estimate for
+    small R, where the low key bits would subdivide further).
+    """
+    sizes = [int(s) for s in sizes]
+    total = sum(sizes)
+    if total == 0 or p <= 0:
+        return 1.0
+    if len(sizes) > 1:
+        width = (len(sizes) - 1) // p + 1
+        shares = np.zeros(p, np.float64)
+        for i, s in enumerate(sizes):
+            shares[min(i // width, p - 1)] += s
+        return float(shares.max() / total)
+    s = np.asarray(samples[0])
+    if s.size == 0:
+        return 1.0
+    lo, hi = int(s.min()), int(s.max())
+    width = (hi - lo) // p + 1
+    b = (s.astype(np.int64) - lo) // width
+    return float(np.bincount(b, minlength=p).max() / s.size)
 
 
 def lane_spread(sizes: Sequence[int], p: int) -> Tuple[int, float]:
@@ -132,9 +193,18 @@ def fingerprint_arrays(
     total = sum(sizes)
     n_p = n_per_proc or _pow2_n_per_proc(total, p, min_n_per_proc)
     smax, smean = lane_spread(sizes, p)
-    dups = tuple(
-        sampled_dup_fraction(np.asarray(a).reshape(-1), sample, seed + i)
+    picks = [
+        _sampled(np.asarray(a).reshape(-1), sample, seed + i)
         for i, a in enumerate(arrays)
+    ]
+    dups = tuple(
+        float(np.unique(s, return_counts=True)[1].max() / s.size)
+        if s.size
+        else 0.0
+        for s in picks
+    )
+    int_key = all(
+        np.issubdtype(np.asarray(a).dtype, np.integer) for a in arrays
     )
     return Fingerprint(
         n_keys=total,
@@ -144,6 +214,9 @@ def fingerprint_arrays(
         lane_spread_max=smax,
         lane_spread_mean=smean,
         dup_fractions=dups,
+        int_key=int_key,
+        key_range_bits=sampled_range_bits(picks) if int_key else 31,
+        radix_share=radix_share(picks, sizes, p) if int_key else 1.0,
     )
 
 

@@ -62,6 +62,12 @@ from .fingerprint import Fingerprint, bucket_key, fingerprint_arrays
 N_RUNGS = 3
 
 
+#: route="radix" is picked when the estimated busiest range-bucket share is
+#: within this factor of the perfect 1/p (see fingerprint.radix_share) —
+#: balanced-enough integer keys skip the splitter superstep entirely.
+RADIX_SKEW = 3.0
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanDecision:
     """One batch's dispatch plan, also the record() correlation token."""
@@ -72,10 +78,15 @@ class PlanDecision:
     pair_cap_override: Optional[int]  # planned capacity (keys), quantized
     omega: Optional[float]  # solved oversampling regulator
     rung: int  # learned rung this plan started at
+    # distribution route: "sample" (splitter pipeline, capacity fields
+    # above apply) or "radix" (count-then-distribute — the launch driver
+    # sizes the single rung from the true counts, so the capacity fields
+    # are moot and retries are impossible by construction).
+    route: str = "sample"
 
     @property
     def start_tier(self) -> str:
-        return self.pair_capacity
+        return "radix" if self.route == "radix" else self.pair_capacity
 
 
 def _quantize_cap(cap: int, n_per_proc: int, pad_align: int = 8) -> int:
@@ -100,6 +111,7 @@ class CapacityPlanner:
         #: bucket -> {"rung", "attempts", "faults", "clean"}
         self.history: Dict[str, Dict[str, int]] = {}
         self.plans = 0  # telemetry: plan() calls
+        self.radix_plans = 0  # telemetry: plans routed count-then-distribute
         self.promotions = 0
         self.probes = 0
         self._dirty = False  # unsaved observations (see save_if_dirty)
@@ -190,6 +202,16 @@ class CapacityPlanner:
         rung = self.rung_for(bucket)
         self.plans += 1
         layout = "contiguous" if single else "striped"
+        if fp.int_key and fp.radix_share <= min(1.0, RADIX_SKEW / p):
+            # balanced integer keys: count-then-distribute. No oversampling
+            # to solve and no capacity to plan — the route's launch path
+            # reads the exact counts off the prepared boundaries and the
+            # ladder is one rung, so there is nothing for the fault
+            # feedback to learn either (observe() still records the clean
+            # run, keeping the bucket's probe counters truthful).
+            self.radix_plans += 1
+            return PlanDecision(bucket, layout, "exact", None, None, rung,
+                                route="radix")
         if rung >= N_RUNGS - 1:
             return PlanDecision(bucket, layout, "exact", None, None, rung)
         omega, cap = planned_cap_for(fp, single_segment=single)
@@ -289,6 +311,7 @@ class CapacityPlanner:
     def telemetry(self) -> Dict[str, object]:
         return {
             "plans": self.plans,
+            "radix_plans": self.radix_plans,
             "buckets": len(self.history),
             "promotions": self.promotions,
             "probes": self.probes,

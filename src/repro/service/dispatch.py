@@ -230,7 +230,12 @@ class Dispatcher:
             layout=decision.layout,
         )
         overrides = {"pair_capacity": decision.pair_capacity}
-        if decision.pair_capacity == "planned":
+        if decision.route == "radix":
+            # count-then-distribute: the launch driver host-reads the exact
+            # counts and runs ONE rung — radix batches report retries == 0
+            # by construction
+            overrides["route"] = "radix"
+        elif decision.pair_capacity == "planned":
             overrides["pair_cap_override"] = decision.pair_cap_override
             overrides["omega"] = decision.omega
         return packed, overrides, decision
@@ -269,7 +274,11 @@ class Dispatcher:
                     futures=item.futures,
                     failsink=item.failsink,
                     decision=decision,
-                    start_tier=overrides["pair_capacity"],
+                    start_tier=(
+                        "radix"
+                        if overrides.get("route") == "radix"
+                        else overrides["pair_capacity"]
+                    ),
                     stats=batch_stats,
                     inflight=inflight,
                 )

@@ -134,3 +134,32 @@ def test_ep_safe_planner_policy_stops_paying_doomed_whp():
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=3e-2, rtol=3e-2
     )
+
+
+def test_ep_safe_radix_route_true_count_capacity_no_fallback():
+    """Count-then-distribute EP dispatch: the router-only counting pass
+    sizes the receive buffer from the true per-(src,dst) counts, so the
+    single rung serves with zero retries and never touches the ladder's
+    full (p·n) tier — even with a capacity_factor guess that would doom
+    the whp rung."""
+    cfg, lp, x = _setup()
+    ref = _dense_reference(cfg, lp, x)
+    got, aux, stats = moe_mod.moe_ep_safe(
+        lp, x, cfg, moe_mod.MoEMeshInfo(), capacity_factor=0.01, route="radix"
+    )
+    assert not bool(aux["overflow"])
+    assert stats.attempts == {"radix": 1}, stats.as_row()
+    assert stats.retries == 0 and stats.last_tier == "radix"
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_ep_counts_match_dispatch_counts():
+    """The counting pass and the dispatch body must route identically: the
+    counted max bounds every per-destination count the dispatch computes
+    (equality at p=1: all records to the one shard)."""
+    cfg, lp, x = _setup()
+    pair_true = int(moe_mod.moe_ep_counts(lp, x, cfg, moe_mod.MoEMeshInfo()))
+    T = x.shape[0] * x.shape[1]
+    assert pair_true == T * cfg.moe_top_k  # p=1: every record -> shard 0

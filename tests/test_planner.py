@@ -285,9 +285,21 @@ def test_planner_promotes_on_faults_and_probes_down():
 
 
 def test_planner_rungs_map_to_start_tiers():
-    arrays = [np.arange(512, dtype=np.int32) for _ in range(8)]
+    # balanced equal-size int segments route radix since the radix PR:
+    # single exact-capacity rung, no ω, no rung ladder to learn
+    balanced = [np.arange(512, dtype=np.int32) for _ in range(8)]
     pl = CapacityPlanner()
+    dr = pl.plan(balanced, 8)
+    assert dr.route == "radix" and dr.start_tier == "radix"
+    assert dr.pair_cap_override is None and dr.omega is None
+
+    # skewed sizes put the busiest range bucket over RADIX_SKEW/p — these
+    # stay on the sampling route and exercise the rung→tier mapping
+    arrays = [np.arange(2048, dtype=np.int32)] + [
+        np.arange(64, dtype=np.int32) for _ in range(7)
+    ]
     d0 = pl.plan(arrays, 8)
+    assert d0.route == "sample"
     assert d0.pair_capacity == "planned" and d0.layout == "striped"
     assert d0.pair_cap_override < 512 and d0.omega >= 1.0
     pl.history[d0.bucket]["rung"] = 1
@@ -314,8 +326,13 @@ def test_planner_history_persists_and_changes_start_tier(
     import repro.planner.planner as planner_mod
 
     path = str(tmp_path / "history.json")
+    # skewed sizes keep the batch on the sampling route (a balanced
+    # equal-size int batch would plan route="radix" and never consult
+    # the capacity bound this test sabotages)
     arrays = [
-        np.random.default_rng(i).integers(0, 2**31, 300).astype(np.int32)
+        np.random.default_rng(i)
+        .integers(0, 2**31, 2048 if i == 0 else 64)
+        .astype(np.int32)
         for i in range(8)
     ]
     # an underestimating bound makes the planned tier genuinely overflow
@@ -401,9 +418,11 @@ def test_executor_registry_growth_bounded_under_mixed_soak():
     route_keys = [k for k in keys_after_first if k[0] == "route"]
     prepare_keys = [k for k in keys_after_first if k[0] == "prepare"]
     # per pow2 bucket shape: ≤8 planned levels × ladder rungs (planned,
-    # planned2, exact, allgather) plus the whp pair — a fixed constant
-    assert len(route_keys) <= len(shapes) * 12, sorted(route_keys)
-    assert len(prepare_keys) <= len(shapes), sorted(prepare_keys)
+    # planned2, exact, allgather) plus the whp pair — a fixed constant —
+    # plus the radix route's octave-quantized counted capacities
+    assert len(route_keys) <= len(shapes) * 12, len(route_keys)
+    # one sampling-route prepare + one radix-route prepare per shape
+    assert len(prepare_keys) <= len(shapes) * 2, len(prepare_keys)
     counts_after_first = dict(ex.trace_counts)
     soak(0)  # replay: identical traffic must reuse every compiled callable
     # (equality of COUNTS, not just keys: a silent per-call retrace would

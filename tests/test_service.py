@@ -239,14 +239,23 @@ def test_single_segment_int32_path_handles_max_key_collisions():
 
 def test_single_segment_batch_serves_on_cheap_sub_exact_tier():
     """The auto tier keeps the cheap regime for single-segment sorts (serve
-    admission / data bucketing): a benign corpus must be served by a
-    sub-exact rung with zero retries — since PR 4 that is the planner's
-    ``planned`` capacity (at most the classic whp bound, and pad-aware),
-    not exact's p×-larger routing buffers."""
+    admission / data bucketing): a benign corpus must be served in one
+    attempt with zero retries and without exact's p×-larger routing
+    buffers. Since the radix PR a balanced integer corpus takes the
+    count-then-distribute route (one exact-capacity rung, no splitter
+    superstep); a range-skewed corpus still rides the planner's sampled
+    ``planned`` capacity (at most the classic whp bound, pad-aware)."""
     lens = np.random.default_rng(11).integers(1, 5000, 999).astype(np.int32)
     svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
     res = svc.sort_one(lens)
     assert np.array_equal(res.keys, np.sort(lens))
+    assert res.tier == "radix" and svc.stats.retries == 0, svc.stats.as_row()
+    # range-skewed keys (zipf mass at small values) stay on the sampling
+    # route and serve at the planner's sub-exact capacity
+    skew = datagen.generate("zipf", 1, 999, seed=11)[0]
+    svc = SortService(ServiceConfig(p=8), executor=SortExecutor())
+    res = svc.sort_one(skew)
+    assert np.array_equal(res.keys, np.sort(skew))
     assert res.tier == "planned" and svc.stats.retries == 0, svc.stats.as_row()
     # an explicit pin still forces the classic whp regime
     svc = SortService(

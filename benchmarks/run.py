@@ -30,6 +30,12 @@ def main() -> None:
         "--json", type=str, default=None, metavar="OUT",
         help="also write BENCH_<table>.json files into the OUT directory",
     )
+    ap.add_argument(
+        "--trace", type=str, default=None, metavar="OUT",
+        help="run a traced profile sort and write a Chrome trace_event JSON "
+        "to OUT (open in chrome://tracing or Perfetto), then print the "
+        "fitted (g, L) cost report",
+    )
     args = ap.parse_args()
 
     if args.full:
@@ -74,6 +80,7 @@ def main() -> None:
     go("hotpath", tables.table_hotpath, M // 16 if not args.full else M, p=8)
     go("radix", tables.table_radix, M // 16 if not args.full else M,
        p=8 if not args.full else 16)
+    go("obs", tables.table_obs, M // 16 if not args.full else M // 4, p=8)
     go("service", tables.table_service, n_requests=64,
        total=M // 16 if not args.full else M, p=8 if not args.full else 16)
     go("planner", tables.table_planner, n_requests=64,
@@ -86,6 +93,58 @@ def main() -> None:
     if args.json:
         for path in write_json(args.json):
             emit("meta", {"json": path})
+
+    if args.trace:
+        traced_profile(args.trace, full=args.full)
+
+
+def traced_profile(out: str, full: bool) -> None:
+    """One traced run per route; Chrome trace to ``out`` + cost report.
+
+    The profile sorts the balanced [U] mix through the sampling and the
+    radix routes at two sizes each (the (g, L) regression needs h to
+    vary), saves the merged timeline as Chrome ``trace_event`` JSON and
+    prints the fitted-machine cost report: effective g (s/word), L
+    (s/superstep), and per-superstep predicted-vs-measured rows.
+    """
+    import json
+
+    import jax.numpy as jnp
+
+    from repro import obs
+    from repro.core import SortConfig, bsp_sort_safe, datagen
+
+    p, n_p = (16, M // 64) if full else (8, M // 128)
+    tracer = obs.Tracer()
+    for route, kw in (
+        ("sample", dict(pair_capacity="whp")),
+        ("radix", dict(route="radix", pair_capacity="exact")),
+    ):
+        for scale in (1, 2):
+            base = dict(
+                p=p, n_per_proc=n_p * scale, routing="a2a_dense", **kw
+            )
+            x = jnp.asarray(datagen.generate("U", p, n_p * scale, seed=21))
+            bsp_sort_safe(x, SortConfig(**base))  # warm: compile untimed
+            bsp_sort_safe(x, SortConfig(obs=tracer, **base))
+    path = tracer.save(out)
+    with open(path) as f:
+        problems = obs.validate_chrome_trace(json.load(f))
+    problems += obs.validate_spans(tracer)
+    rep = tracer.cost_report()
+    fit = rep["fit"]
+    emit(
+        "trace",
+        {"path": path, "valid": not problems, "spans": len(tracer.spans),
+         "fit_ok": fit["ok"], "n_samples": fit["n_samples"],
+         "g_s_per_word": round(fit["g_s_per_word"], 9),
+         "l_s": round(fit["l_s"], 6), "r2": round(fit["r2"], 4),
+         "max_imbalance": round(rep["max_imbalance"], 4)},
+    )
+    for row in rep["supersteps"]:
+        emit("trace", row)
+    for msg in problems:
+        print(f"trace: INVALID: {msg}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -652,3 +652,100 @@ def table_duplicate_handling_overhead(n, p=64):
         {"n": n, "p": p, "t_U": round(tu, 4), "t_allsame": round(td, 4),
          "ratio": round(td / tu, 3)},
     )
+
+
+def table_obs(n, p=8):
+    """Traced-run observability: per-route h volume, imbalance, (g, L) fit.
+
+    Every data row is a *traced* overflow-safe sort (``SortConfig`` with
+    ``obs=tracer``); one tracer is shared across the whole table so the
+    final ``fit`` row can regress the measured route-span walls against
+    their traced h volumes and superstep counts (BSP cost w + g·h + L →
+    per-word gap ``fit_g_s``, sync latency ``fit_l_s``). Two sizes per
+    route give the regression its h spread.
+
+    ``h_words`` is the traced max-per-processor relation size in 32-bit
+    words — a pure function of the seeded input and the route, so it is an
+    identity column: drift means the routing changed, not that it got
+    slower. ``imbalance`` (max/mean received keys) is likewise seeded-
+    deterministic but diffed as a metric (lower is better); ``imb_ok``
+    checks it against the paper's §6.4 bound (1 + eps) and must hold on
+    the balanced [U] mix for the direct routes. The ``segmented`` rows run
+    the fused multi-request path, whose pad composites sort to the global
+    tail — their ``imb_ok`` documents how far lane padding pushes the
+    received skew rather than asserting the w.h.p. theory.
+    """
+    from repro import obs
+    from repro.core import (
+        pack_segments,
+        segmented_sort_safe,
+        theoretical_max_imbalance,
+    )
+
+    tracer = obs.Tracer()
+
+    def report(route, nn, bound_cfg, run):
+        mark = len(tracer.spans)
+        t0 = time.time()
+        ok = bool(run())
+        wall = time.time() - t0
+        spans = [s for s in tracer.spans[mark:] if s["name"] == "route"]
+        h = max((s["args"]["h_words"] for s in spans), default=0)
+        imb = max((s["args"]["imbalance"] for s in spans), default=0.0)
+        bound = 1.0 + theoretical_max_imbalance(bound_cfg)
+        emit(
+            "obs",
+            {"mix": "U", "route": route, "p": p, "n": nn,
+             "h_words": h,
+             "imb_ok": bool(imb <= bound),
+             "imbalance": round(float(imb), 4),
+             "wall_s": round(wall, 4),
+             "complete": ok},
+        )
+
+    for nn in (n // 2, n):
+        n_p = nn // p
+        xs = datagen.generate("U", p, n_p, seed=21)
+        x = jnp.asarray(xs)
+        ref = np.sort(np.asarray(xs).ravel())
+        for route, kw in (
+            ("sample", dict(pair_capacity="whp")),
+            ("radix", dict(route="radix", pair_capacity="exact")),
+        ):
+            base = dict(p=p, n_per_proc=n_p, routing="a2a_dense", **kw)
+            cfg = SortConfig(**base)
+            bsp_sort_safe(x, cfg)  # warm: compile outside the timed run
+            tcfg = SortConfig(obs=tracer, **base)
+
+            def run(x=x, tcfg=tcfg, ref=ref):
+                res, _, _ = bsp_sort_safe(x, tcfg)
+                return np.array_equal(gathered_output(res), ref)
+
+            report(route, nn, cfg, run)
+
+        segs = [np.asarray(a, np.int32) for a in np.array_split(xs.ravel(), 7)]
+        packed = pack_segments(segs, p=p)
+        seg_ref = [np.sort(s) for s in segs]
+        segmented_sort_safe(packed)  # warm (configs are obs-blind equal)
+
+        def run_seg(packed=packed, seg_ref=seg_ref):
+            out = segmented_sort_safe(packed, obs=tracer)
+            return all(
+                np.array_equal(k, r) for k, r in zip(out.keys, seg_ref)
+            )
+
+        report(
+            "segmented", nn,
+            SortConfig(p=packed.p, n_per_proc=packed.n_per_proc), run_seg,
+        )
+
+    f = tracer.fit()
+    emit(
+        "obs",
+        {"mix": "U", "route": "fit", "p": p, "n": n,
+         "fit_ok": f.ok,
+         "n_samples": f.n_samples,
+         "fit_g_s": round(f.g_s_per_word, 9),
+         "fit_l_s": round(f.l_s, 6),
+         "r2": round(f.r2, 4)},
+    )

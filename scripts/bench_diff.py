@@ -11,8 +11,10 @@ variants, tier names, counters' non-metric context) must match exactly,
 and metric fields are compared under a relative tolerance —
 
 * lower-is-better: wall/latency seconds (``wall*``, ``*_s``, ``lat_*``),
-  retry counters (``retries*``, ``retry_cost``);
-* higher-is-better: ``speedup``, ``*keys_per_s``, ``work_eff*``;
+  retry counters (``retries*``, ``retry_cost``), received-key
+  ``imbalance`` (the obs table's max/mean load skew);
+* higher-is-better: ``speedup``, ``*keys_per_s``, ``work_eff*``, and the
+  obs table's fit quality ``r2``;
 * latency *percentiles* (``*_p99*``, ``*_p95*``, ``*_p90*``, ``*_p50*``)
   are lower-is-better but gated under ``--tol-pctile`` (default 2× the
   base tolerance): a tail quantile over an open-loop arrival process is
@@ -44,8 +46,8 @@ import sys
 from typing import Dict, List, Optional, Tuple
 
 #: metric-name fragments, direction: +1 = higher is better, -1 = lower
-_HIGHER = ("speedup", "keys_per_s", "work_eff")
-_LOWER = ("wall", "lat_", "retry", "retries")
+_HIGHER = ("speedup", "keys_per_s", "work_eff", "r2")
+_LOWER = ("wall", "lat_", "retry", "retries", "imbalance")
 #: latency-percentile fragments: lower is better, looser tolerance
 _PCTILE = ("_p99", "_p95", "_p90", "_p50")
 

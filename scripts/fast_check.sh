@@ -9,8 +9,11 @@
 # counts, pipeline saturation (in_flight_peak/overlapped), the radix
 # table's zero-retry guarantee and other identity fields must match
 # exactly, walls within a generous shared-core tolerance and the soak
-# p99 under bench_diff's looser percentile gate. Set SKIP_BENCH=1 to
-# skip the perf gates (e.g. on a loaded machine).
+# p99 under bench_diff's looser percentile gate. The `obs` table rides
+# the same regen (traced h volume / imbalance / fitted (g, L)), and an
+# obs smoke runs one traced sort end-to-end: byte-identical output,
+# valid Chrome trace, clean span schema, working cost report. Set
+# SKIP_BENCH=1 to skip the perf gates (e.g. on a loaded machine).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -20,7 +23,7 @@ python -m pytest -m fast -q
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   tmp="$(mktemp -d)"
   trap 'rm -rf "$tmp"' EXIT
-  python -m benchmarks.run --tables hotpath,soak,radix --json "$tmp" > /dev/null
+  python -m benchmarks.run --tables hotpath,soak,radix,obs --json "$tmp" > /dev/null
   python scripts/bench_diff.py \
     benchmarks/baselines/BENCH_hotpath.json "$tmp/BENCH_hotpath.json" \
     --tol 0.6
@@ -29,6 +32,9 @@ if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
     --tol 0.6
   python scripts/bench_diff.py \
     benchmarks/baselines/BENCH_radix.json "$tmp/BENCH_radix.json" \
+    --tol 0.6 --allow-missing-baseline
+  python scripts/bench_diff.py \
+    benchmarks/baselines/BENCH_obs.json "$tmp/BENCH_obs.json" \
     --tol 0.6 --allow-missing-baseline
 fi
 
@@ -69,4 +75,42 @@ with tempfile.TemporaryDirectory() as d:
     assert svc2.stats.retries == 0, svc2.stats.as_row()
     print("planner smoke: planned-tier fused sort + radix route + "
           "history round-trip OK")
+EOF
+
+python - <<'EOF'
+# obs smoke: one traced overflow-safe sort — output byte-identical to the
+# untraced run, Chrome trace + span schema validate clean, cost report has
+# per-superstep h volume and a sane imbalance.
+import json, os, tempfile
+import numpy as np
+import jax.numpy as jnp
+from repro import obs
+from repro.core import (SortConfig, bsp_sort_safe, datagen, gathered_output,
+                        theoretical_max_imbalance)
+
+p, n_p = 8, 4096
+x = jnp.asarray(datagen.generate("U", p, n_p, seed=21))
+base = dict(p=p, n_per_proc=n_p, routing="a2a_dense", pair_capacity="whp")
+res0, _, _ = bsp_sort_safe(x, SortConfig(**base))
+
+tracer = obs.Tracer()
+res1, _, _ = bsp_sort_safe(x, SortConfig(obs=tracer, **base))
+assert np.array_equal(gathered_output(res0), gathered_output(res1)), \
+    "traced run changed the output"
+
+assert obs.validate_spans(tracer) == [], obs.validate_spans(tracer)
+with tempfile.TemporaryDirectory() as d:
+    path = tracer.save(os.path.join(d, "trace.json"))
+    with open(path) as f:
+        problems = obs.validate_chrome_trace(json.load(f))
+    assert problems == [], problems
+
+rep = tracer.cost_report()
+rows = rep["supersteps"]
+assert rows and all(r["h_words"] >= n_p for r in rows), rows
+bound = 1.0 + theoretical_max_imbalance(SortConfig(**base))
+assert rep["max_imbalance"] <= bound, (rep["max_imbalance"], bound)
+print(f"obs smoke: traced sort byte-identical, valid Chrome trace "
+      f"({len(rows)} route span(s)), imbalance "
+      f"{rep['max_imbalance']:.3f} <= {bound:.3f} OK")
 EOF

@@ -105,9 +105,16 @@ from .bitonic import sort_bitonic_spmd
 from .local_sort import local_sort
 from .sort_det import prepare_det_spmd, route_det_spmd, sort_det_spmd
 from .sort_iran import prepare_iran_spmd, route_iran_spmd, sort_iran_spmd
-from .sort_radix import prepare_radix_spmd, route_radix_spmd, sort_radix_spmd
+from .sort_radix import (
+    host_send_counts,
+    prepare_radix_spmd,
+    route_radix_spmd,
+    sort_radix_spmd,
+)
 from .sort_ran import prepare_ran_spmd, route_ran_spmd, sort_ran_spmd
 from .types import AXIS, PreparedSort, SortConfig, SortResult
+from ..obs import REGISTRY as _OBS
+from ..obs import resolve_tracer
 
 _ALGOS = {
     "det": sort_det_spmd,
@@ -210,6 +217,9 @@ def bsp_sort_sharded(
     p, n_p = x.shape
     if cfg is None:
         cfg = SortConfig(p=p, n_per_proc=n_p, **overrides)
+    if cfg.obs is not None:
+        # obs is hash-excluded, but strip it so executor keys never pin it
+        cfg = dataclasses.replace(cfg, obs=None)
     if rng is None:
         rng = jax.random.key(cfg.seed)
     ex = executor if executor is not None else _EXECUTOR
@@ -235,12 +245,18 @@ class TierStats:
     retries: int = 0  # total re-runs forced by overflow faults
 
     def record(self, tier: str, ok: bool) -> None:
+        # Mirror every attempt into the process-wide metrics registry;
+        # merge_from deliberately does NOT re-mirror (the per-batch record
+        # already counted each attempt once).
         self.attempts[tier] = self.attempts.get(tier, 0) + 1
+        _OBS.counter("sort.tier_attempts", tier=tier).inc()
         if ok:
             self.successes[tier] = self.successes.get(tier, 0) + 1
             self.last_tier = tier
+            _OBS.counter("sort.tier_ok", tier=tier).inc()
         else:
             self.retries += 1
+            _OBS.counter("sort.retries").inc()
 
     def merge_from(self, other: "TierStats") -> None:
         """Fold another instance's counters in (per-batch → accumulator).
@@ -520,6 +536,12 @@ class InFlightSort:
     ``on_complete(stats)`` fires once, after the winning rung — completion-
     callback hooks (planner feedback) ride it instead of blocking the
     launcher. ``wait`` is idempotent: the result is cached.
+
+    ``tracer``/``trace_meta`` (``repro.obs``) record one "route" span per
+    rung — opened at the device launch here or in :meth:`wait`'s escalation,
+    closed at the overflow host-sync — carrying the rung's traced h-relation
+    size, superstep count, and received-key balance. Both default to off and
+    only ever touch host-side bookkeeping around the jitted calls.
     """
 
     def __init__(
@@ -531,6 +553,8 @@ class InFlightSort:
         *,
         scope: Optional[Callable] = None,
         on_complete: Optional[Callable] = None,
+        tracer=None,
+        trace_meta: Optional[Dict] = None,
     ) -> None:
         self.stats = stats if stats is not None else TierStats()
         self._ladder = ladder
@@ -538,8 +562,14 @@ class InFlightSort:
         self._run_tier = run_tier
         self._scope = scope if scope is not None else contextlib.nullcontext
         self._on_complete = on_complete
+        self._tracer = tracer
+        self._meta = trace_meta if trace_meta is not None else {}
+        #: timeline lane of this sort's spans (None when untraced) — the
+        #: segmented service uses it to attach its own points to the lane.
+        self.trace_tid = self._meta.get("tid") if tracer is not None else None
         self._out: Optional[Tuple[SortResult, List[jnp.ndarray], TierStats]] = None
         self._i = 0
+        self._t_launch = tracer.now() if tracer is not None else 0.0
         with self._scope():
             self._pending = run_tier(ladder[0][1], jax.random.fold_in(rng, 0))
 
@@ -547,14 +577,47 @@ class InFlightSort:
         """Whether :meth:`wait` has already resolved (never blocks)."""
         return self._out is not None
 
+    def _record_route(self, res: SortResult, tier: str, tier_cfg, ok, t_sync):
+        """Close the launch-opened route span at the overflow host-sync."""
+        tr = self._tracer
+        t_end = tr.now()
+        cat = self._meta.get("cat", "sort")
+        tid = self.trace_tid or "main"
+        counts = np.asarray(res.count)
+        recv_max = int(counts.max())
+        recv_mean = float(counts.mean())
+        row_bytes = int(self._meta.get("row_bytes", 4))
+        # h of the route stage in 32-bit words: the larger of what any proc
+        # sent (its n_per_proc rows) and what any proc received, times the
+        # packed row width of the fused exchange.
+        h_words = (max(recv_max, tier_cfg.n_per_proc) * row_bytes) // 4
+        args = dict(
+            tier=tier,
+            rung=self._i,
+            ok=ok,
+            sync_s=round(t_end - t_sync, 6),
+            h_words=h_words,
+            supersteps=routing.route_supersteps(tier_cfg.routing, tier_cfg.p),
+            recv_max=recv_max,
+            recv_mean=recv_mean,
+            imbalance=(recv_max / recv_mean) if recv_mean > 0 else 1.0,
+        )
+        if tier_cfg.p <= 64:
+            args["recv"] = counts.tolist()  # per-proc key counts
+        tr.add_span("route", self._t_launch, t_end=t_end, cat=cat, tid=tid, **args)
+        tr.point("host_sync", cat=cat, tid=tid, what="overflow", rung=self._i, ok=ok)
+
     def wait(self) -> Tuple[SortResult, List[jnp.ndarray], TierStats]:
         """Block until a rung's overflow flag is clean; escalate on faults."""
         if self._out is not None:
             return self._out
         while True:
             res, vbufs = self._pending
-            tier = self._ladder[self._i][0]
+            tier, tier_cfg = self._ladder[self._i]
+            t_sync = self._tracer.now() if self._tracer is not None else 0.0
             ok = not bool(res.overflow)  # host sync: the retry decision point
+            if self._tracer is not None:
+                self._record_route(res, tier, tier_cfg, ok, t_sync)
             self.stats.record(tier, ok)
             if ok:
                 self._out = (res, vbufs, self.stats)
@@ -568,6 +631,8 @@ class InFlightSort:
                     "allgather/full tier cannot overflow (ladder: "
                     f"{[t for t, _ in self._ladder]})"
                 )
+            if self._tracer is not None:
+                self._t_launch = self._tracer.now()
             with self._scope():
                 self._pending = self._run_tier(
                     self._ladder[self._i][1],
@@ -576,10 +641,87 @@ class InFlightSort:
 
 
 def _escalate(
-    ladder: tuple, rng: jax.Array, stats: Optional[TierStats], run_tier: Callable
+    ladder: tuple,
+    rng: jax.Array,
+    stats: Optional[TierStats],
+    run_tier: Callable,
+    *,
+    tracer=None,
+    trace_meta: Optional[Dict] = None,
 ) -> Tuple[SortResult, List[jnp.ndarray], TierStats]:
     """Blocking escalation: launch rung 0 and wait through the ladder."""
-    return InFlightSort(ladder, rng, stats, run_tier).wait()
+    return InFlightSort(
+        ladder, rng, stats, run_tier, tracer=tracer, trace_meta=trace_meta
+    ).wait()
+
+
+def _trace_meta_for(tracer, x, values, cat: str = "sort") -> Optional[Dict]:
+    """Per-launch trace metadata: a fresh timeline lane + packed row width."""
+    if tracer is None:
+        return None
+    return {
+        "tid": tracer.next_tid("sort"),
+        "cat": cat,
+        "row_bytes": routing.packed_row_bytes(x.dtype, [v.dtype for v in values]),
+    }
+
+
+def _trace_prepared(tracer, meta: Dict, cfg: SortConfig, prep: PreparedSort) -> None:
+    """Record the prepared distribution snapshot (host-side, traced runs only).
+
+    * ``route="radix"`` — the counted boundaries are exact: per-(src, dst)
+      send counts and byte volumes of the upcoming h-relation, before any
+      data moves.
+    * ``det`` — the tier-invariant splitters are in hand: searchsorting each
+      locally sorted run against them gives the splitter-implied boundary
+      *estimate* (tag-blind, so off by at most the duplicate runs) and hence
+      the oversampling skew the Lemma 5.1 bound is guarding against.
+    * ``iran``/``ran`` draw their sample inside the route stage (a retry
+      must be an independent trial), so there is nothing prepared to read.
+    """
+    tid, cat = meta["tid"], meta.get("cat", "sort")
+    row_bytes = int(meta.get("row_bytes", 4))
+    if cfg.route == "radix" and prep.splits is not None:
+        sendc = host_send_counts(prep.splits[0])  # (p, p) exact counts
+        recv = sendc.sum(axis=0)
+        args = dict(
+            kind="radix_counts",
+            pair_max=int(sendc.max()),
+            recv_max=int(recv.max()),
+            imbalance=float(recv.max() / recv.mean()) if recv.mean() > 0 else 1.0,
+            row_bytes=row_bytes,
+        )
+        if cfg.p <= 64:
+            args["send_bytes"] = (sendc * row_bytes).tolist()  # per (src, dst)
+        tracer.point("distribution", cat=cat, tid=tid, **args)
+    elif cfg.algorithm == "det" and cfg.route == "sample" and prep.splits:
+        keys = np.asarray(prep.splits[0])[0]  # replicated (p-1,) splitter keys
+        xs = np.asarray(prep.xs)  # (p, n_per_proc), locally sorted
+        bounds = np.stack([np.searchsorted(row, keys) for row in xs])
+        sendc = np.diff(
+            np.concatenate(
+                [
+                    np.zeros((cfg.p, 1), np.int64),
+                    bounds,
+                    np.full((cfg.p, 1), xs.shape[1], np.int64),
+                ],
+                axis=1,
+            ),
+            axis=1,
+        )
+        recv = sendc.sum(axis=0)
+        args = dict(
+            kind="splitter_estimate",
+            pair_max=int(sendc.max()),
+            recv_max=int(recv.max()),
+            skew=float(recv.max() / recv.mean()) if recv.mean() > 0 else 1.0,
+            omega=cfg.omega_eff,
+            sample_size=cfg.s,
+            row_bytes=row_bytes,
+        )
+        if cfg.p <= 64:
+            args["send_bytes"] = (sendc * row_bytes).tolist()  # per (src, dst)
+        tracer.point("distribution", cat=cat, tid=tid, **args)
 
 
 def _radix_exact_ladder(cfg: SortConfig, prep: PreparedSort) -> tuple:
@@ -598,8 +740,7 @@ def _radix_exact_ladder(cfg: SortConfig, prep: PreparedSort) -> tuple:
     would have allocated, and since cap ≥ true count on every pair,
     overflow (and hence any retry) is impossible.
     """
-    bounds = np.asarray(prep.splits[0])  # (p, p+1): one row per source
-    sendc = np.diff(bounds, axis=1)  # counts[src, dst]
+    sendc = host_send_counts(prep.splits[0])  # counts[src, dst]
     pair_true = int(sendc.max())
     recv_true = int(sendc.sum(axis=0).max())
 
@@ -652,6 +793,13 @@ def bsp_sort_safe_launch(
     p, n_p = x.shape
     if cfg is None:
         cfg = SortConfig(p=p, n_per_proc=n_p, **overrides)
+    tracer = resolve_tracer(cfg.obs)
+    if cfg.obs is not None:
+        # Hold the tracer as a local only: the cfg the ladder/executor see
+        # carries obs=None, so registry keys never pin a Tracer. (obs is
+        # hash/compare-excluded — this changes no cache key.)
+        cfg = dataclasses.replace(cfg, obs=None)
+    meta = _trace_meta_for(tracer, x, values)
     if rng is None:
         rng = jax.random.key(cfg.seed)
     ex = executor if executor is not None else _EXECUTOR
@@ -689,14 +837,35 @@ def bsp_sort_safe_launch(
         # Ph2 (+ det Ph3, or the radix counting pass), exactly once — inside
         # the scope: the prepare stage consumes the (possibly int64) input
         # directly
-        if scope is not None:
-            with scope():
-                prep = ex.prepare_vmap(cfg, nv)(x, *values)
+        def _prepare():
+            if scope is not None:
+                with scope():
+                    return ex.prepare_vmap(cfg, nv)(x, *values)
+            return ex.prepare_vmap(cfg, nv)(x, *values)
+
+        if tracer is not None:
+            # Traced runs block at the stage boundary so the prepare span is
+            # device-inclusive and the route spans start clean. Untraced runs
+            # keep full async dispatch.
+            with tracer.span(
+                "prepare",
+                tid=meta["tid"],
+                algorithm=cfg.algorithm,
+                route=cfg.route,
+                p=p,
+                n_per_proc=n_p,
+            ):
+                prep = jax.block_until_ready(_prepare())
+            _trace_prepared(tracer, meta, cfg, prep)
         else:
-            prep = ex.prepare_vmap(cfg, nv)(x, *values)
+            prep = _prepare()
         if cfg.route == "radix":
             # counts are in hand: collapse the ladder to one rung sized to
             # the true maxima — zero retries by construction
+            if tracer is not None:
+                tracer.point(
+                    "host_sync", tid=meta["tid"], what="radix_counts"
+                )
             ladder = _radix_exact_ladder(cfg, prep)
 
         def run_tier(tier_cfg, tier_rng):
@@ -707,7 +876,14 @@ def bsp_sort_safe_launch(
             )
 
     return InFlightSort(
-        ladder, rng, stats, run_tier, scope=scope, on_complete=on_complete
+        ladder,
+        rng,
+        stats,
+        run_tier,
+        scope=scope,
+        on_complete=on_complete,
+        tracer=tracer,
+        trace_meta=meta,
     )
 
 
@@ -767,6 +943,10 @@ def bsp_sort_sharded_safe(
     p, n_p = x.shape
     if cfg is None:
         cfg = SortConfig(p=p, n_per_proc=n_p, **overrides)
+    tracer = resolve_tracer(cfg.obs)
+    if cfg.obs is not None:
+        cfg = dataclasses.replace(cfg, obs=None)
+    meta = _trace_meta_for(tracer, x, values)
     if rng is None:
         rng = jax.random.key(cfg.seed)
     ex = executor if executor is not None else _EXECUTOR
@@ -783,11 +963,29 @@ def bsp_sort_sharded_safe(
                 vbufs
             )
 
-        return _escalate(cfg.tier_ladder(), rng, stats, run_tier)
+        return _escalate(
+            cfg.tier_ladder(), rng, stats, run_tier, tracer=tracer, trace_meta=meta
+        )
 
-    prep = ex.prepare_sharded(cfg, mesh, mesh_axis, nv)(x, *values)
+    if tracer is not None:
+        with tracer.span(
+            "prepare",
+            tid=meta["tid"],
+            algorithm=cfg.algorithm,
+            route=cfg.route,
+            p=p,
+            n_per_proc=n_p,
+        ):
+            prep = jax.block_until_ready(
+                ex.prepare_sharded(cfg, mesh, mesh_axis, nv)(x, *values)
+            )
+        _trace_prepared(tracer, meta, cfg, prep)
+    else:
+        prep = ex.prepare_sharded(cfg, mesh, mesh_axis, nv)(x, *values)
     ladder = cfg.tier_ladder()
     if cfg.route == "radix":
+        if tracer is not None:
+            tracer.point("host_sync", tid=meta["tid"], what="radix_counts")
         ladder = _radix_exact_ladder(cfg, prep)
 
     def run_tier(tier_cfg, tier_rng):
@@ -795,7 +993,7 @@ def bsp_sort_sharded_safe(
         buf, vbufs, count, overflow = fn(prep, jax.random.key_data(tier_rng))
         return SortResult(buf=buf, count=count, overflow=overflow.any()), list(vbufs)
 
-    return _escalate(ladder, rng, stats, run_tier)
+    return _escalate(ladder, rng, stats, run_tier, tracer=tracer, trace_meta=meta)
 
 
 def gathered_output(result: SortResult) -> np.ndarray:

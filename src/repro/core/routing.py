@@ -163,6 +163,35 @@ def send_counts(boundaries: jnp.ndarray) -> jnp.ndarray:
     return jnp.diff(boundaries)
 
 
+# ---------------------------------------------- host-side observability math
+def packed_row_bytes(key_dtype, value_dtypes=()) -> int:
+    """Bytes one routed row carries in the fused exchange (key + payloads).
+
+    Pure host math for the tracer: the fused Ph5 collective moves
+    byte-packed (key, payload...) rows, so a traced h-relation's byte
+    volume is ``counts × packed_row_bytes`` and its BSP h (32-bit words,
+    the paper's unit) is that over 4.
+    """
+    return int(sum(np.dtype(d).itemsize for d in (key_dtype, *value_dtypes)))
+
+
+def route_supersteps(routing: str, p: int) -> int:
+    """Data supersteps one route-stage execution issues under ``routing``.
+
+    The tracer charges each route span ``supersteps × L`` in the (g, L)
+    fit: ``a2a_dense`` is the (p,)-word count bookkeeping all_to_all plus
+    ONE fused data all_to_all (see :func:`recv_rows`); ``allgather`` is a
+    single fused all_gather; ``ring`` is p−1 ppermute visitor supersteps.
+    """
+    if routing == "a2a_dense":
+        return 2
+    if routing == "allgather":
+        return 1
+    if routing == "ring":
+        return max(1, p - 1)
+    raise ValueError(f"unknown routing {routing!r}")
+
+
 def recv_counts(counts: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Transpose the (implicit) p×p count matrix: r[j] = counts_on_proc_j[me].
 

@@ -371,6 +371,21 @@ def segmented_sort_launch(
         executor=executor,
         scope=scope,
     )
+    if flight.trace_tid is not None:
+        # attach the batch's segment shape to the sort's timeline lane
+        from ..obs import resolve_tracer
+
+        tracer = resolve_tracer(cfg.obs)
+        sizes = packed.sizes
+        tracer.point(
+            "segments",
+            tid=flight.trace_tid,
+            n_segments=len(sizes),
+            n_keys=packed.n_keys,
+            layout=packed.layout,
+            sizes=list(sizes) if len(sizes) <= 256 else None,
+            size_max=max(sizes) if sizes else 0,
+        )
     return InFlightSegmentedSort(packed=packed, flight=flight)
 
 

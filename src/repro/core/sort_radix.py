@@ -45,6 +45,7 @@ from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from . import routing
@@ -70,6 +71,19 @@ def radix_boundaries(
     return jnp.searchsorted(
         dest, jnp.arange(p + 1, dtype=jnp.int32), side="left"
     ).astype(jnp.int32)
+
+
+def host_send_counts(bounds) -> np.ndarray:
+    """(p, p) per-(src, dst) send counts from the counted boundaries.
+
+    Host-side companion of :func:`radix_boundaries`: ``bounds`` is the
+    prepared ``splits[0]`` — (p, p+1) under the global layout, one row per
+    source — and differencing each row yields the exact h-relation count
+    matrix. Shared by the launch driver's single-rung capacity sizing and
+    the tracer's per-(src, dst) byte-volume record; reading it is the radix
+    launch path's only host sync.
+    """
+    return np.diff(np.asarray(bounds), axis=1)
 
 
 def prepare_radix_spmd(

@@ -125,6 +125,15 @@ class SortConfig:
     # fields. Overrides the Lemma/Claim 5.1 formula when set.
     n_max_override: Optional[int] = None
     seed: int = 0
+    # Observability handle (repro.obs.Tracer or None). Host-side only: the
+    # drivers read it at launch/wait boundaries, traced code never sees it.
+    # compare=False keeps it out of the generated __eq__/__hash__, so a
+    # traced and an untraced config are EQUAL — they share executor-registry
+    # entries and compiled programs (the "obs must not change compiled
+    # programs" invariant, asserted by tests/test_obs.py).
+    obs: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
 
     # ------------------------------------------------------------------ math
     @property
@@ -327,6 +336,9 @@ class SortConfig:
             omega=self.omega
             if (self.algorithm == "det" and self.route == "sample")
             else None,
+            # hash-excluded anyway, but dropped so executor-registry keys
+            # never pin a Tracer (and its span buffers) for process lifetime
+            obs=None,
         )
 
     def validate(self) -> None:

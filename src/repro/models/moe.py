@@ -50,6 +50,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import obs as obs_mod
 from repro.configs.base import ArchConfig
 from repro.core import TierStats
 from repro.core import routing
@@ -431,6 +432,7 @@ def moe_ep_safe(
     stats: Optional[TierStats] = None,
     planner=None,
     route: str = "sample",
+    obs=None,
 ) -> Tuple[jnp.ndarray, Dict, TierStats]:
     """Overflow-safe EP dispatch: escalate the capacity tier on token drop.
 
@@ -456,17 +458,37 @@ def moe_ep_safe(
     keeps dropping tokens at the ``whp`` guess stops paying the doomed
     attempt and starts at the rung that empirically serves. (The radix
     route has a single rung, so the planner has nothing to learn there.)
+
+    ``obs`` (a :class:`repro.obs.Tracer`) records per-attempt dispatch
+    spans on a ``moe`` timeline lane — the counting-pass host sync and each
+    rung's launch-to-decision wall — without touching the jitted programs.
     """
     stats = stats if stats is not None else TierStats()
+    tracer = obs_mod.resolve_tracer(obs)
+    tid = tracer.next_tid("moe") if tracer is not None else None
     if route == "radix":
         # one host sync: the true max records any (src, dst) pair carries
+        t0 = tracer.now() if tracer is not None else 0.0
         pair_true = int(_moe_ep_counts_jitted(cfg, mesh_info)(params, x))
+        if tracer is not None:
+            tracer.add_span(
+                "count", t0, cat="moe", tid=tid, pair_true=pair_true
+            )
+            tracer.point("host_sync", cat="moe", tid=tid, what="moe_counts")
         # quantize up to ~16 steps per octave: bounds distinct compiled
         # programs while staying within 1/16th of the exact bound
         step = max(8, 1 << max(0, pair_true.bit_length() - 4))
         qpair = -(-max(pair_true, 1) // step) * step
+        t1 = tracer.now() if tracer is not None else 0.0
         y, aux = _moe_ep_jitted(cfg, mesh_info, 1.0, pair_cap=qpair)(params, x)
-        if bool(aux["overflow"]):  # caps >= true counts: unreachable
+        overflow = bool(aux["overflow"])
+        if tracer is not None:
+            tracer.add_span(
+                "dispatch", t1, cat="moe", tid=tid,
+                tier="radix", ok=not overflow, pair_cap=qpair,
+            )
+        obs_mod.metrics().counter("moe.radix_dispatches").inc()
+        if overflow:  # caps >= true counts: unreachable
             raise RuntimeError(
                 "radix EP dispatch overflowed its counted capacity"
             )
@@ -482,8 +504,14 @@ def moe_ep_safe(
         ladder = ladder[planner.rung_for(bucket, n_rungs) :]
     faulted = False
     for tier, cf in ladder:
+        t0 = tracer.now() if tracer is not None else 0.0
         y, aux = _moe_ep_jitted(cfg, mesh_info, cf)(params, x)
         ok = not bool(aux["overflow"])
+        if tracer is not None:
+            tracer.add_span(
+                "dispatch", t0, cat="moe", tid=tid,
+                tier=tier, ok=ok, capacity_factor=cf,
+            )
         stats.record(tier, ok)
         if ok:
             if bucket is not None:

@@ -53,6 +53,7 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.types import round_up
 
 from .capacity import planned_cap_for
@@ -110,10 +111,14 @@ class CapacityPlanner:
         self.probe_after = int(probe_after)
         #: bucket -> {"rung", "attempts", "faults", "clean"}
         self.history: Dict[str, Dict[str, int]] = {}
-        self.plans = 0  # telemetry: plan() calls
-        self.radix_plans = 0  # telemetry: plans routed count-then-distribute
-        self.promotions = 0
-        self.probes = 0
+        # telemetry — registry counters under this planner's instance label;
+        # the legacy attribute names are read-only property views below
+        self.label = obs.next_instance("planner")
+        reg = obs.metrics()
+        self._plans = reg.counter("planner.plans", planner=self.label)
+        self._radix_plans = reg.counter("planner.radix_plans", planner=self.label)
+        self._promotions = reg.counter("planner.promotions", planner=self.label)
+        self._probes = reg.counter("planner.probes", planner=self.label)
         self._dirty = False  # unsaved observations (see save_if_dirty)
         #: disk snapshot at load/last save — the merge-on-save baseline for
         #: computing what OTHER processes observed since (see save)
@@ -130,6 +135,25 @@ class CapacityPlanner:
                               "starting fresh")
                 self.history = {}
         self._base = {k: dict(v) for k, v in self.history.items()}
+
+    # ----------------------------------------------- legacy telemetry views
+    @property
+    def plans(self) -> int:
+        """plan() calls."""
+        return self._plans.value
+
+    @property
+    def radix_plans(self) -> int:
+        """Plans routed count-then-distribute."""
+        return self._radix_plans.value
+
+    @property
+    def promotions(self) -> int:
+        return self._promotions.value
+
+    @property
+    def probes(self) -> int:
+        return self._probes.value
 
     # ------------------------------------------------------------ learning
     def _entry(self, bucket: str) -> Dict[str, int]:
@@ -168,11 +192,11 @@ class CapacityPlanner:
         ):
             e["rung"] += 1
             e["attempts"] = e["faults"] = e["clean"] = 0
-            self.promotions += 1
+            self._promotions.inc()
         elif e["clean"] >= self.probe_after and e["rung"] > 0:
             e["rung"] -= 1
             e["attempts"] = e["faults"] = e["clean"] = 0
-            self.probes += 1
+            self._probes.inc()
 
     # ------------------------------------------------------------ planning
     def plan(
@@ -200,7 +224,7 @@ class CapacityPlanner:
         single = fp.n_segments <= 1
         bucket = bucket_key(fp)
         rung = self.rung_for(bucket)
-        self.plans += 1
+        self._plans.inc()
         layout = "contiguous" if single else "striped"
         if fp.int_key and fp.radix_share <= min(1.0, RADIX_SKEW / p):
             # balanced integer keys: count-then-distribute. No oversampling
@@ -209,7 +233,7 @@ class CapacityPlanner:
             # ladder is one rung, so there is nothing for the fault
             # feedback to learn either (observe() still records the clean
             # run, keeping the bucket's probe counters truthful).
-            self.radix_plans += 1
+            self._radix_plans.inc()
             return PlanDecision(bucket, layout, "exact", None, None, rung,
                                 route="radix")
         if rung >= N_RUNGS - 1:

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ArchConfig
 from repro.core import TierStats
 from repro.data import length_bucketed_order
@@ -80,8 +81,14 @@ class ServeEngine:
         self.sort_service = SortService(
             ServiceConfig(p=self.sort_p), stats=self.capacity_stats
         )
-        self.refills = 0  # queue admissions into retired decode slots
-        self.admission_prefetches = 0  # prefills launched ahead of retirement
+        # engine counters live in the process-wide metrics registry; the
+        # attribute names stay as read-only property views
+        self.label = obs.next_instance("engine")
+        reg = obs.metrics()
+        self._refills = reg.counter("serve.refills", engine=self.label)
+        self._admission_prefetches = reg.counter(
+            "serve.admission_prefetches", engine=self.label
+        )
         self._decode = jax.jit(
             lambda p, c, t: model.decode_step(p, c, t, None)
         )
@@ -94,6 +101,16 @@ class ServeEngine:
             )
         )
         self._prefill_jits: Dict[tuple, object] = {}  # per (prompt_len, cache_len)
+
+    @property
+    def refills(self) -> int:
+        """Queue admissions into retired decode slots."""
+        return self._refills.value
+
+    @property
+    def admission_prefetches(self) -> int:
+        """Prefills launched ahead of retirement."""
+        return self._admission_prefetches.value
 
     def admission_order(self, prompt_lengths, p: Optional[int] = None) -> np.ndarray:
         """Globally length-sorted admission order for a request queue.
@@ -231,7 +248,7 @@ class ServeEngine:
                 if rid is not None:
                     k = jax.random.fold_in(rng, 1000 + rid)
                     prefetched = (rid, *admit(rid, k))
-                    self.admission_prefetches += 1
+                    self._admission_prefetches.inc()
 
         def take_admission():
             nonlocal prefetched
@@ -284,7 +301,7 @@ class ServeEngine:
                         break
                     nxt, cache_s, tok_s = adm
                     slot_req[s] = nxt
-                    self.refills += 1
+                    self._refills.inc()
                     caches = jax.tree.map(
                         lambda full, one: full.at[s].set(one), caches, cache_s
                     )

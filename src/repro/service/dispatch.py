@@ -43,6 +43,7 @@ import dataclasses
 import time
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+from repro import obs
 from repro.core import TierStats
 from repro.core.api import SortExecutor
 from repro.core.segmented import (
@@ -121,6 +122,8 @@ class _Queued:
     batch: Batch
     futures: Dict[int, SortFuture]
     failsink: bool  # this batch is a failsink re-dispatch
+    tid: Optional[str] = None  # trace timeline lane (traced runs only)
+    t_enqueued: float = 0.0  # tracer clock at enqueue (traced runs only)
 
 
 @dataclasses.dataclass
@@ -134,6 +137,8 @@ class _Flight:
     start_tier: str
     stats: TierStats  # isolated per batch; merged into the shared stats
     inflight: InFlightSegmentedSort
+    tid: Optional[str] = None  # trace timeline lane (traced runs only)
+    t_launched: float = 0.0  # tracer clock at launch end (traced runs only)
 
 
 class Dispatcher:
@@ -169,18 +174,96 @@ class Dispatcher:
         self.max_in_flight = max(1, int(max_in_flight))
         self._queue: Deque[_Queued] = collections.deque()
         self._flights: Deque[_Flight] = collections.deque()
-        # telemetry
-        self.launches = 0
-        self.overlapped_launches = 0  # launched while another batch flew
-        self.in_flight_peak = 0
-        self.batches_dispatched = 0
-        self.keys_sorted = 0
-        self.bucket_counts: Dict[int, int] = {}  # n_per_proc -> batches
-        self.start_tiers: Dict[str, int] = {}  # starting tier -> batches
-        self.failsink_splits = 0  # batch bisections after a failure
-        self.failsink_solo_retries = 0  # solo re-dispatch of a failed rid
-        self.failsink_errors = 0  # rids terminally failed past failsink
-        self.failsink_resolved = 0  # rids completing on a failsink re-dispatch
+        # telemetry — counters live in the process-wide metrics registry
+        # under this dispatcher's instance label; the legacy attribute names
+        # (launches, in_flight_peak, bucket_counts, ...) are read-only
+        # property views over the same counters
+        self.label = obs.next_instance("svc")
+        reg = obs.metrics()
+        self._launches = reg.counter("dispatch.launches", svc=self.label)
+        self._overlapped = reg.counter(
+            "dispatch.overlapped_launches", svc=self.label
+        )
+        self._in_flight_peak = reg.gauge("dispatch.in_flight_peak", svc=self.label)
+        self._batches = reg.counter("dispatch.batches", svc=self.label)
+        self._keys_sorted = reg.counter("dispatch.keys_sorted", svc=self.label)
+        self._failsink_splits = reg.counter(
+            "dispatch.failsink_splits", svc=self.label
+        )
+        self._failsink_solo_retries = reg.counter(
+            "dispatch.failsink_solo_retries", svc=self.label
+        )
+        self._failsink_errors = reg.counter(
+            "dispatch.failsink_errors", svc=self.label
+        )
+        self._failsink_resolved = reg.counter(
+            "dispatch.failsink_resolved", svc=self.label
+        )
+        # queue→form→launch→flight timeline (ServiceConfig.obs; off by
+        # default — every tracer touch below is guarded)
+        self._tracer = obs.resolve_tracer(getattr(cfg, "obs", None))
+
+    # ----------------------------------------------- legacy telemetry views
+    @property
+    def launches(self) -> int:
+        return self._launches.value
+
+    @property
+    def overlapped_launches(self) -> int:
+        """Launches performed while another batch's device work flew."""
+        return self._overlapped.value
+
+    @property
+    def in_flight_peak(self) -> int:
+        return self._in_flight_peak.value
+
+    @property
+    def batches_dispatched(self) -> int:
+        return self._batches.value
+
+    @property
+    def keys_sorted(self) -> int:
+        return self._keys_sorted.value
+
+    @property
+    def bucket_counts(self) -> Dict[int, int]:
+        """n_per_proc -> completed batches (view over the registry)."""
+        return {
+            int(lbl["bucket"]): c.value
+            for lbl, c in obs.metrics().collect(
+                "dispatch.batches_by_bucket", svc=self.label
+            )
+        }
+
+    @property
+    def start_tiers(self) -> Dict[str, int]:
+        """starting tier -> completed batches (view over the registry)."""
+        return {
+            str(lbl["tier"]): c.value
+            for lbl, c in obs.metrics().collect(
+                "dispatch.start_tier", svc=self.label
+            )
+        }
+
+    @property
+    def failsink_splits(self) -> int:
+        """Batch bisections after a failure."""
+        return self._failsink_splits.value
+
+    @property
+    def failsink_solo_retries(self) -> int:
+        """Solo re-dispatches of a failed rid."""
+        return self._failsink_solo_retries.value
+
+    @property
+    def failsink_errors(self) -> int:
+        """Rids terminally failed past failsink."""
+        return self._failsink_errors.value
+
+    @property
+    def failsink_resolved(self) -> int:
+        """Rids completing on a failsink re-dispatch."""
+        return self._failsink_resolved.value
 
     # ------------------------------------------------------------- queue
     @property
@@ -199,7 +282,14 @@ class Dispatcher:
         failsink: bool = False,
         front: bool = False,
     ) -> None:
-        item = _Queued(batch=batch, futures=futures, failsink=failsink)
+        tr = self._tracer
+        item = _Queued(
+            batch=batch,
+            futures=futures,
+            failsink=failsink,
+            tid=tr.next_tid("batch") if tr is not None else None,
+            t_enqueued=tr.now() if tr is not None else 0.0,
+        )
         if front:
             self._queue.appendleft(item)
         else:
@@ -247,11 +337,36 @@ class Dispatcher:
         flights' collectives execute on the device — this loop is the
         overlap the async restructure exists for.
         """
+        tr = self._tracer
         while self._queue and len(self._flights) < self.max_in_flight:
             item = self._queue.popleft()
+            if tr is not None:
+                tr.add_span(
+                    "queue",
+                    item.t_enqueued,
+                    cat="dispatch",
+                    tid=item.tid,
+                    n_rids=len(item.batch.rids),
+                    failsink=item.failsink,
+                )
+            t_form = tr.now() if tr is not None else 0.0
             try:
                 packed, overrides, decision = self._resolve_batch(item.batch)
+                if tr is not None:
+                    tr.add_span(
+                        "form",
+                        t_form,
+                        cat="dispatch",
+                        tid=item.tid,
+                        n_per_proc=packed.n_per_proc,
+                        layout=packed.layout,
+                        n_keys=packed.n_keys,
+                    )
+                    # the fused sort traces onto the same Tracer (its own
+                    # sortN lane; the launch span below links the two)
+                    overrides["obs"] = self.cfg.obs
                 batch_stats = TierStats()  # isolates this batch's outcome
+                t_launch = tr.now() if tr is not None else 0.0
                 inflight = segmented_sort_launch(
                     packed,
                     algorithm=self.cfg.algorithm,
@@ -265,25 +380,37 @@ class Dispatcher:
             except Exception as exc:  # launch-time failure: same failsink
                 self._handle_failure(item, exc)
                 continue
-            self.launches += 1
+            start_tier = (
+                "radix"
+                if overrides.get("route") == "radix"
+                else overrides["pair_capacity"]
+            )
+            if tr is not None:
+                tr.add_span(
+                    "launch",
+                    t_launch,
+                    cat="dispatch",
+                    tid=item.tid,
+                    start_tier=start_tier,
+                    sort_tid=inflight.flight.trace_tid,
+                )
+            self._launches.inc()
             if len(self._flights) >= 1:
-                self.overlapped_launches += 1
+                self._overlapped.inc()
             self._flights.append(
                 _Flight(
                     batch=item.batch,
                     futures=item.futures,
                     failsink=item.failsink,
                     decision=decision,
-                    start_tier=(
-                        "radix"
-                        if overrides.get("route") == "radix"
-                        else overrides["pair_capacity"]
-                    ),
+                    start_tier=start_tier,
                     stats=batch_stats,
                     inflight=inflight,
+                    tid=item.tid,
+                    t_launched=tr.now() if tr is not None else 0.0,
                 )
             )
-            self.in_flight_peak = max(self.in_flight_peak, len(self._flights))
+            self._in_flight_peak.set_max(len(self._flights))
 
     def step(self) -> bool:
         """Complete the oldest in-flight batch (blocking), refill the slots.
@@ -303,6 +430,17 @@ class Dispatcher:
             self._handle_failure(flight, exc)
             self.pump()
             return True
+        if self._tracer is not None:
+            self._tracer.add_span(
+                "flight",
+                flight.t_launched,
+                cat="dispatch",
+                tid=flight.tid,
+                start_tier=flight.start_tier,
+                tier=seg.tier,
+                n_rids=len(flight.batch.rids),
+                retries=flight.stats.retries,
+            )
         self._complete(flight, seg)
         self.pump()
         return True
@@ -325,16 +463,18 @@ class Dispatcher:
             # tier overflow? (Persistence stays deferred to the service's
             # flush boundary — save_if_dirty there.)
             self.planner.record(flight.decision, faulted=flight.stats.retries > 0)
-        self.start_tiers[flight.start_tier] = (
-            self.start_tiers.get(flight.start_tier, 0) + 1
-        )
-        self.batches_dispatched += 1
-        self.keys_sorted += flight.batch.total_keys
-        self.bucket_counts[flight.batch.n_per_proc] = (
-            self.bucket_counts.get(flight.batch.n_per_proc, 0) + 1
-        )
+        obs.metrics().counter(
+            "dispatch.start_tier", svc=self.label, tier=flight.start_tier
+        ).inc()
+        self._batches.inc()
+        self._keys_sorted.inc(flight.batch.total_keys)
+        obs.metrics().counter(
+            "dispatch.batches_by_bucket",
+            svc=self.label,
+            bucket=flight.batch.n_per_proc,
+        ).inc()
         if flight.failsink:
-            self.failsink_resolved += len(flight.batch.rids)
+            self._failsink_resolved.inc(len(flight.batch.rids))
         for rid, keys, order in zip(flight.batch.rids, seg.keys, seg.order):
             fut = flight.futures[rid]
             fut.failsink = fut.failsink or flight.failsink
@@ -362,19 +502,20 @@ class Dispatcher:
                 rids=(rid,),
             )
             err.__cause__ = exc
-            self.failsink_errors += 1
+            self._failsink_errors.inc()
             self.on_failure(fut, err)
             return
         if len(rids) == 1:
-            self.failsink_solo_retries += 1
+            self._failsink_solo_retries.inc()
             halves = [list(zip(rids, arrays))]
         else:
-            self.failsink_splits += 1
+            self._failsink_splits.inc()
             mid = len(rids) // 2
             halves = [
                 list(zip(rids[:mid], arrays[:mid])),
                 list(zip(rids[mid:], arrays[mid:])),
             ]
+        tr = self._tracer
         requeue: List[_Queued] = []
         for half in halves:
             for batch in self.former.form(half):
@@ -383,6 +524,8 @@ class Dispatcher:
                         batch=batch,
                         futures={r: item.futures[r] for r in batch.rids},
                         failsink=True,
+                        tid=tr.next_tid("batch") if tr is not None else None,
+                        t_enqueued=tr.now() if tr is not None else 0.0,
                     )
                 )
         self._queue.extendleft(reversed(requeue))  # keep half order at head

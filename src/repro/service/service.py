@@ -46,7 +46,6 @@ instance (and every other sort caller) shares compiled programs per bucket.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import time
 import warnings
@@ -54,6 +53,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core import TierStats
 from repro.core.api import SortExecutor, default_executor
 from repro.planner import CapacityPlanner
@@ -98,6 +98,12 @@ class ServiceConfig:
     # unclaimed results (each eviction counts in ``evicted_results``; the
     # result stays cached on its SortFuture). None disables the bound.
     max_unclaimed: Optional[int] = 1024
+    # Observability handle (repro.obs.Tracer or None), hash/compare-excluded
+    # like SortConfig.obs: the dispatcher records its queue→form→launch→
+    # flight timeline on it and threads it into every fused sort launch.
+    obs: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
 
 
 @dataclasses.dataclass
@@ -163,15 +169,53 @@ class SortService:
         self._pending: List[_Pending] = []
         self._completed: Dict[int, RequestResult] = {}  # unclaimed results
         self._next_rid = 0
-        # telemetry — latencies keep a bounded window (a long-lived serving
-        # process must not grow one float per request forever); the
-        # lifetime request count is its own counter
-        self.latencies: Deque[float] = collections.deque(maxlen=1 << 16)
-        self.requests_done = 0
-        self.requests_failed = 0
-        self.evicted_results = 0
-        self.flush_triggers: Dict[str, int] = {}  # manual/size/deadline
-        self._lat_memo = (-1, {})  # (requests_done it covers, stats row)
+        # telemetry — lives in the process-wide metrics registry under the
+        # dispatcher's instance label (one label per service). The latency
+        # histogram keeps a bounded window (a long-lived serving process
+        # must not grow one float per request forever) with the lifetime
+        # request count as its own counter; the legacy attribute names
+        # (latencies, requests_done, ...) are read-only property views.
+        self.label = self.dispatcher.label
+        reg = obs.metrics()
+        self._lat = reg.histogram("service.request_latency_s", svc=self.label)
+        self._requests_done = reg.counter("service.requests_done", svc=self.label)
+        self._requests_failed = reg.counter(
+            "service.requests_failed", svc=self.label
+        )
+        self._evicted = reg.counter("service.evicted_results", svc=self.label)
+
+    # ----------------------------------------------- registry metric views
+    @property
+    def latencies(self) -> Deque[float]:
+        """The latency histogram's bounded recent-value window (seconds)."""
+        return self._lat.values
+
+    @property
+    def requests_done(self) -> int:
+        return self._requests_done.value
+
+    @property
+    def requests_failed(self) -> int:
+        return self._requests_failed.value
+
+    @property
+    def evicted_results(self) -> int:
+        return self._evicted.value
+
+    @property
+    def flush_triggers(self) -> Dict[str, int]:
+        """trigger (manual/size/deadline/ready/claim) -> flush count."""
+        return {
+            str(lbl["trigger"]): c.value
+            for lbl, c in obs.metrics().collect(
+                "service.flush_triggers", svc=self.label
+            )
+        }
+
+    def _count_flush(self, trigger: str) -> None:
+        obs.metrics().counter(
+            "service.flush_triggers", svc=self.label, trigger=trigger
+        ).inc()
 
     # -------------------------------------------- dispatcher delegation
     # batch-level counters live on the dispatcher (completion is its job
@@ -250,9 +294,7 @@ class SortService:
         """
         todo, self._pending = self._pending, []
         if todo:
-            self.flush_triggers[trigger] = (
-                self.flush_triggers.get(trigger, 0) + 1
-            )
+            self._count_flush(trigger)
         fut_by_rid = {r.rid: r.future for r in todo}
         for batch in self.former.form([(r.rid, r.keys) for r in todo]):
             self.dispatcher.enqueue(
@@ -276,9 +318,7 @@ class SortService:
             [(r.rid, r.keys) for r in todo], min_keys=min_keys
         )
         if batches:
-            self.flush_triggers["ready"] = (
-                self.flush_triggers.get("ready", 0) + 1
-            )
+            self._count_flush("ready")
         for batch in batches:
             self.dispatcher.enqueue(
                 batch, {rid: fut_by_rid[rid] for rid in batch.rids}
@@ -323,8 +363,8 @@ class SortService:
     def _deliver(self, fut: SortFuture, keys, order, tier, n_per_proc) -> None:
         """Dispatcher completion callback: resolve the future + store."""
         lat = time.perf_counter() - fut.submitted_at
-        self.latencies.append(lat)
-        self.requests_done += 1
+        self._lat.observe(lat)
+        self._requests_done.inc()
         res = RequestResult(
             rid=fut.rid,
             keys=keys,
@@ -340,10 +380,10 @@ class SortService:
             while len(self._completed) > self.cfg.max_unclaimed:
                 oldest = next(iter(self._completed))  # insertion order
                 del self._completed[oldest]
-                self.evicted_results += 1
+                self._evicted.inc()
 
     def _deliver_failure(self, fut: SortFuture, exc: BaseException) -> None:
-        self.requests_failed += 1
+        self._requests_failed.inc()
         fut._fail(exc)
 
     def take_result(
@@ -406,23 +446,17 @@ class SortService:
         return self.take_result(fut)
 
     def _latency_row(self) -> Dict[str, object]:
-        """Latency stats, memoized per completion count: polling telemetry
-        in a soak loop must not rescan the full window when nothing new
-        completed."""
-        done, row = self._lat_memo
-        if done == self.requests_done:
-            return row
-        lat = np.fromiter(self.latencies, np.float64)
-        row = {}
-        if lat.size:
-            p50, p99 = np.quantile(lat, [0.5, 0.99])
-            row = {
-                "lat_mean_ms": round(float(lat.mean()) * 1e3, 3),
-                "lat_p50_ms": round(float(p50) * 1e3, 3),
-                "lat_p99_ms": round(float(p99) * 1e3, 3),
-            }
-        self._lat_memo = (self.requests_done, row)
-        return row
+        """Latency stats from the registry histogram. The memoization the
+        soak loop relies on (poll telemetry without rescanning the window
+        when nothing new completed) lives in ``Histogram.summary``."""
+        s = self._lat.summary()
+        if not s.get("count"):
+            return {}
+        return {
+            "lat_mean_ms": round(s["mean"] * 1e3, 3),
+            "lat_p50_ms": round(s["p50"] * 1e3, 3),
+            "lat_p99_ms": round(s["p99"] * 1e3, 3),
+        }
 
     def telemetry(self) -> Dict[str, object]:
         """Flat snapshot for logs/benchmark rows; latency stats cover the

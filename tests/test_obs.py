@@ -1,0 +1,238 @@
+"""Observability subsystem: the registry, the tracer, and the guarantee
+that tracing never changes what the machine computes — traced runs are
+byte-identical to untraced runs, configs stay executor-cache-equal, and
+the compiled programs (trace counts, lowered HLO) are untouched."""
+import json
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import obs
+from repro.core import (
+    SortConfig,
+    TierStats,
+    bsp_sort,
+    bsp_sort_safe,
+    datagen,
+    gathered_output,
+    pack_segments,
+    segmented_sort_safe,
+    theoretical_max_imbalance,
+)
+from repro.core.api import SortExecutor
+
+pytestmark = pytest.mark.fast
+
+P, N_P = 8, 512
+
+
+# ----------------------------------------------------------- registry
+def test_registry_counter_gauge_histogram_snapshot_reset():
+    reg = obs.MetricsRegistry()
+    c = reg.counter("sort.retries")
+    c.inc()
+    c.inc(2)
+    assert c.value == 3
+    g = reg.gauge("dispatch.in_flight_peak", svc="svc9")
+    g.set(2)
+    g.set_max(5)
+    g.set_max(1)  # set_max never lowers
+    assert g.value == 5
+    h = reg.histogram("service.request_latency_s")
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["sort.retries"] == 3
+    assert snap["dispatch.in_flight_peak{svc=svc9}"] == 5
+    assert snap["service.request_latency_s"]["count"] == 3
+    reg.reset()
+    assert c.value == 0 and g.value == 0 and h.count == 0
+    # registrations survive reset: same handle, fresh value
+    assert reg.counter("sort.retries") is c
+
+
+def test_registry_labels_collect_and_kind_clash():
+    reg = obs.MetricsRegistry()
+    reg.counter("sort.tier_attempts", tier="whp").inc()
+    reg.counter("sort.tier_attempts", tier="exact").inc(4)
+    got = {
+        labels["tier"]: m.value
+        for labels, m in reg.collect("sort.tier_attempts")
+    }
+    assert got == {"whp": 1, "exact": 4}
+    assert obs.metric_key("a.b", {"z": 1, "a": 2}) == "a.b{a=2,z=1}"
+    with pytest.raises(TypeError):
+        reg.gauge("sort.tier_attempts", tier="whp")  # kind clash
+
+
+def test_histogram_percentiles_match_numpy():
+    h = obs.Histogram()
+    rng = np.random.default_rng(7)
+    xs = rng.exponential(0.01, 500)
+    for v in xs:
+        h.observe(float(v))
+    s = h.summary()
+    assert s["count"] == 500
+    assert s["mean"] == pytest.approx(xs.mean(), rel=1e-9)
+    assert s["p50"] == pytest.approx(float(np.quantile(xs, 0.5)), rel=1e-9)
+    assert s["p99"] == pytest.approx(float(np.quantile(xs, 0.99)), rel=1e-9)
+
+
+def test_tierstats_mirrors_into_registry():
+    reg = obs.metrics()
+    before_att = reg.counter("sort.tier_attempts", tier="whp").value
+    before_ok = reg.counter("sort.tier_ok", tier="whp").value
+    before_rt = reg.counter("sort.retries").value
+    st = TierStats()
+    st.record("whp", ok=False)
+    st.record("whp", ok=True)
+    assert reg.counter("sort.tier_attempts", tier="whp").value == before_att + 2
+    assert reg.counter("sort.tier_ok", tier="whp").value == before_ok + 1
+    assert reg.counter("sort.retries").value == before_rt + 1
+    # merge_from must NOT re-mirror (each attempt already counted once)
+    st2 = TierStats()
+    st2.merge_from(st)
+    assert reg.counter("sort.tier_attempts", tier="whp").value == before_att + 2
+
+
+# ------------------------------------------- tracing changes nothing
+def test_obs_field_is_cache_invisible():
+    t = obs.Tracer()
+    a = SortConfig(p=P, n_per_proc=N_P)
+    b = SortConfig(p=P, n_per_proc=N_P, obs=t)
+    assert a == b
+    assert hash(a) == hash(b)
+    assert a.prepare_key() == b.prepare_key()
+    assert "obs" not in repr(b)
+
+
+def test_traced_rerun_does_not_retrace_executor():
+    ex = SortExecutor()
+    x = jnp.asarray(datagen.generate("U", P, N_P, seed=3))
+    cfg = SortConfig(p=P, n_per_proc=N_P, routing="a2a_dense")
+    bsp_sort_safe(x, cfg, executor=ex)
+    counts = dict(ex.trace_counts)
+    assert counts  # the untraced run compiled something
+    res, _, _ = bsp_sort_safe(
+        x, SortConfig(p=P, n_per_proc=N_P, routing="a2a_dense",
+                      obs=obs.Tracer()),
+        executor=ex,
+    )
+    assert dict(ex.trace_counts) == counts  # zero new traces
+    assert np.array_equal(
+        gathered_output(res), np.sort(np.asarray(x).ravel())
+    )
+
+
+def test_hlo_identical_with_and_without_obs():
+    x = jnp.asarray(datagen.generate("U", P, N_P, seed=3))
+
+    def lowered(cfg):
+        return (
+            jax.jit(lambda a: bsp_sort(a, cfg)[0].buf).lower(x).as_text()
+        )
+
+    plain = SortConfig(p=P, n_per_proc=N_P, routing="a2a_dense")
+    traced = SortConfig(
+        p=P, n_per_proc=N_P, routing="a2a_dense", obs=obs.Tracer()
+    )
+    assert lowered(plain) == lowered(traced)
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(pair_capacity="whp"),
+        dict(route="radix", pair_capacity="exact"),
+    ],
+    ids=["sample", "radix"],
+)
+def test_traced_output_byte_identical(kw):
+    x = jnp.asarray(datagen.generate("U", P, N_P, seed=5))
+    base = dict(p=P, n_per_proc=N_P, routing="a2a_dense", **kw)
+    r0, _, _ = bsp_sort_safe(x, SortConfig(**base))
+    t = obs.Tracer()
+    r1, _, _ = bsp_sort_safe(x, SortConfig(obs=t, **base))
+    assert np.array_equal(np.asarray(r0.buf), np.asarray(r1.buf))
+    assert np.array_equal(np.asarray(r0.count), np.asarray(r1.count))
+    assert t.route_spans()  # and the run actually got traced
+
+
+def test_traced_segmented_byte_identical():
+    rng = np.random.default_rng(11)
+    segs = [
+        rng.integers(-1000, 1000, s).astype(np.int32) for s in (7, 300, 41)
+    ]
+    packed = pack_segments(segs, p=4)
+    r0 = segmented_sort_safe(packed)
+    t = obs.Tracer()
+    r1 = segmented_sort_safe(packed, obs=t)
+    for a, b in zip(r0.keys, r1.keys):
+        assert np.array_equal(a, b)
+    assert [s for s in t.points if s["name"] == "segments"]
+
+
+# ------------------------------------------------- span/trace schema
+def _traced_run(seed=5):
+    t = obs.Tracer()
+    x = jnp.asarray(datagen.generate("U", P, N_P, seed=seed))
+    cfg = SortConfig(
+        p=P, n_per_proc=N_P, routing="a2a_dense", pair_capacity="whp",
+        obs=t,
+    )
+    bsp_sort_safe(x, cfg)
+    return t, cfg
+
+
+def test_span_schema_and_chrome_trace_validate():
+    t, _ = _traced_run()
+    assert obs.validate_spans(t) == []
+    names = {s["name"] for s in t.spans}
+    assert {"prepare", "route"} <= names
+    route = t.route_spans()[0]
+    for key in ("tier", "rung", "ok", "h_words", "supersteps",
+                "recv_max", "recv_mean", "imbalance", "sync_s"):
+        assert key in route["args"], key
+    with tempfile.TemporaryDirectory() as d:
+        path = t.save(os.path.join(d, "trace.json"))
+        with open(path) as f:
+            data = json.load(f)
+    assert obs.validate_chrome_trace(data) == []
+    phases = {e["ph"] for e in data["traceEvents"]}
+    assert {"X", "M"} <= phases  # spans + thread-name metadata
+
+
+def test_imbalance_within_whp_bound_on_balanced_mix():
+    t, cfg = _traced_run()
+    rep = t.cost_report()
+    assert rep["max_imbalance"] <= 1.0 + theoretical_max_imbalance(cfg)
+    assert all(r["h_words"] >= N_P for r in rep["supersteps"])
+
+
+# --------------------------------------------------------- (g, L) fit
+def test_fit_gl_recovers_synthetic_machine():
+    g, L = 2e-9, 5e-4
+    spans = [
+        {"name": "route", "args": {"h_words": h, "supersteps": s},
+         "dur": g * h + L * s}
+        for h, s in [(1_000, 2), (10_000, 2), (100_000, 2), (50_000, 3)]
+    ]
+    fit = obs.fit_gl(spans)
+    assert fit.ok and fit.n_samples == 4
+    assert fit.g_s_per_word == pytest.approx(g, rel=1e-6)
+    assert fit.l_s == pytest.approx(L, rel=1e-6)
+    assert fit.r2 == pytest.approx(1.0, abs=1e-9)
+    assert fit.predict_s(1_000, 2) == pytest.approx(g * 1_000 + L * 2)
+
+
+def test_fit_gl_degenerate_inputs():
+    assert not obs.fit_gl([]).ok
+    one = [{"name": "route", "args": {"h_words": 5, "supersteps": 2},
+            "dur": 0.1}]
+    assert not obs.fit_gl(one).ok
+    const_h = one * 3
+    assert not obs.fit_gl(const_h).ok  # constant h: g unidentifiable

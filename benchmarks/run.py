@@ -81,6 +81,7 @@ def main() -> None:
     go("radix", tables.table_radix, M // 16 if not args.full else M,
        p=8 if not args.full else 16)
     go("obs", tables.table_obs, M // 16 if not args.full else M // 4, p=8)
+    go("delta", tables.table_delta, M // 16 if not args.full else M, p=8)
     go("service", tables.table_service, n_requests=64,
        total=M // 16 if not args.full else M, p=8 if not args.full else 16)
     go("planner", tables.table_planner, n_requests=64,

@@ -749,3 +749,84 @@ def table_obs(n, p=8):
          "fit_l_s": round(f.l_s, 6),
          "r2": round(f.r2, 4)},
     )
+
+
+def table_delta(n, p=8, fracs=(0.001, 0.01, 0.05, 0.2), repeats=2):
+    """Delta fold vs full resort across Δ/n, per near-sorted pattern.
+
+    Each row times the planner-routed delta path (``repro.delta``: host
+    split → Δ-sized fused sort of the out-of-place composites → one rank
+    merge) against a cold full sort of the same stream through the
+    segmented machinery at the exact capacity (the strongest retry-free
+    baseline — a w.h.p. start could only add retries to the full side).
+    Patterns are the ``datagen.near_sorted`` families; Δ/n spans the
+    ISSUE grid 0.1%–20%.
+
+    Identity columns: ``delta_n`` (the split is deterministic on the
+    seeded stream), ``retries_delta`` (the Δ sort runs ONE exact-capacity
+    Δ-sized rung — any nonzero value is structural, not slow),
+    ``folds``/``resorts`` (the SortedView leg's route counts: the install
+    is a resort, the Δ batch must fold — a fold that became a resort is a
+    routing regression), and ``complete`` (byte-identity of keys AND
+    stable argsort vs numpy for both timed paths and the view leg).
+    ``speedup`` = wall_full / wall_delta, higher is better.
+    """
+    from repro.core.segmented import sort_segments
+    from repro.delta import SortedView, near_sorted_sort, split_sorted_run
+
+    rng = np.random.default_rng(35)
+    for pattern in ("appended", "scattered", "rotated"):
+        for frac in fracs:
+            x = datagen.near_sorted(n, frac, pattern, seed=21)
+            _, delta_idx = split_sorted_run(x)
+            ref_keys = np.sort(x)
+            ref_order = np.argsort(x, kind="stable")
+
+            def run_delta():
+                st = TierStats()
+                res = near_sorted_sort(x, p, stats=st)
+                return res, st
+
+            def run_full():
+                st = TierStats()
+                res = sort_segments([x], p, stats=st, pair_capacity="exact")
+                return res, st
+
+            run_delta(), run_full()  # warm: compile both paths untimed
+            t_d = t_f = float("inf")
+            for _ in range(repeats):
+                t0 = time.time()
+                res_d, st_d = run_delta()
+                t_d = min(t_d, time.time() - t0)
+                t0 = time.time()
+                res_f, st_f = run_full()
+                t_f = min(t_f, time.time() - t0)
+            ok = (
+                np.array_equal(res_d.keys[0], ref_keys)
+                and np.array_equal(res_d.order[0], ref_order)
+                and np.array_equal(res_f.keys[0], ref_keys)
+                and np.array_equal(res_f.order[0], ref_order)
+            )
+
+            # SortedView leg (untimed): install = resort, Δ batch = fold
+            view = SortedView(p=p)
+            routes = [view.fold(x)]
+            d2 = rng.integers(0, 2**31, max(1, len(delta_idx)), dtype=np.int64)
+            d2 = d2.astype(np.int32)
+            routes.append(view.fold(d2))
+            cat = np.concatenate([x, d2])
+            ok = ok and np.array_equal(view.keys, np.sort(cat))
+
+            emit(
+                "delta",
+                {"pattern": pattern, "n": n, "p": p, "frac": frac,
+                 "delta_n": int(delta_idx.size),
+                 "wall_delta_s": round(t_d, 4),
+                 "wall_full_s": round(t_f, 4),
+                 "speedup": round(t_f / max(t_d, 1e-9), 2),
+                 "retries_delta": st_d.retries,
+                 "retries_full": st_f.retries,
+                 "folds": routes.count("fold"),
+                 "resorts": routes.count("resort"),
+                 "complete": ok},
+            )

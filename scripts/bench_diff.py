@@ -15,6 +15,10 @@ and metric fields are compared under a relative tolerance —
   ``imbalance`` (the obs table's max/mean load skew);
 * higher-is-better: ``speedup``, ``*keys_per_s``, ``work_eff*``, and the
   obs table's fit quality ``r2``;
+* identity-by-name: the delta table's fold/resort route counts
+  (``folds``/``resorts``/``tombstones``) and Δ split size (``delta_n``)
+  are deterministic on seeded input, so they must match *exactly* — a
+  changed fold count is a routing regression, not timing noise;
 * latency *percentiles* (``*_p99*``, ``*_p95*``, ``*_p90*``, ``*_p50*``)
   are lower-is-better but gated under ``--tol-pctile`` (default 2× the
   base tolerance): a tail quantile over an open-loop arrival process is
@@ -45,6 +49,11 @@ import os
 import sys
 from typing import Dict, List, Optional, Tuple
 
+#: exact names pinned as identity fields regardless of the fragment lists
+#: below: the delta table's fold/resort route counts and its Δ split size
+#: are deterministic on seeded input — any drift is a routing/split change
+#: to fail structurally (exit 2), never a tolerated "metric" move
+_IDENTITY = ("folds", "resorts", "tombstones", "delta_n")
 #: metric-name fragments, direction: +1 = higher is better, -1 = lower
 _HIGHER = ("speedup", "keys_per_s", "work_eff", "r2")
 _LOWER = ("wall", "lat_", "retry", "retries", "imbalance")
@@ -63,8 +72,11 @@ def metric_direction(name: str):
     The seconds suffix is matched with ``endswith`` only — a substring test
     would swallow identity fields that merely contain ``_s`` (e.g. the
     planner table's ``lane_spread_max``) and let structural drift pass as a
-    metric "improvement".
+    metric "improvement". ``_IDENTITY`` names are checked first so route
+    counters stay exact-match even if a direction fragment ever collides.
     """
+    if name in _IDENTITY:
+        return None
     for frag in _HIGHER:
         if frag in name:
             return 1

@@ -10,7 +10,9 @@
 # table's zero-retry guarantee and other identity fields must match
 # exactly, walls within a generous shared-core tolerance and the soak
 # p99 under bench_diff's looser percentile gate. The `obs` table rides
-# the same regen (traced h volume / imbalance / fitted (g, L)), and an
+# the same regen (traced h volume / imbalance / fitted (g, L)), as does
+# the `delta` table (fold vs full-resort speedup — higher-better — plus
+# the fold/resort route counts and the Δ split size as identities), and an
 # obs smoke runs one traced sort end-to-end: byte-identical output,
 # valid Chrome trace, clean span schema, working cost report. Set
 # SKIP_BENCH=1 to skip the perf gates (e.g. on a loaded machine).
@@ -23,7 +25,7 @@ python -m pytest -m fast -q
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   tmp="$(mktemp -d)"
   trap 'rm -rf "$tmp"' EXIT
-  python -m benchmarks.run --tables hotpath,soak,radix,obs --json "$tmp" > /dev/null
+  python -m benchmarks.run --tables hotpath,soak,radix,obs,delta --json "$tmp" > /dev/null
   python scripts/bench_diff.py \
     benchmarks/baselines/BENCH_hotpath.json "$tmp/BENCH_hotpath.json" \
     --tol 0.6
@@ -35,6 +37,9 @@ if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
     --tol 0.6 --allow-missing-baseline
   python scripts/bench_diff.py \
     benchmarks/baselines/BENCH_obs.json "$tmp/BENCH_obs.json" \
+    --tol 0.6 --allow-missing-baseline
+  python scripts/bench_diff.py \
+    benchmarks/baselines/BENCH_delta.json "$tmp/BENCH_delta.json" \
     --tol 0.6 --allow-missing-baseline
 fi
 

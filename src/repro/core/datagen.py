@@ -152,6 +152,49 @@ def dense_int(p: int, n_p: int, seed: int = 0, domain: int = 64) -> np.ndarray:
     ).astype(np.int32)
 
 
+NEAR_SORTED_PATTERNS = ("appended", "scattered", "rotated")
+
+
+def near_sorted(
+    n: int, delta_frac: float, pattern: str = "appended", seed: int = 0
+) -> np.ndarray:
+    """1-D near-sorted stream: sorted uniform base with Δ = ``delta_frac``·n
+    keys out of place. The delta subsystem's workload generator (bench table
+    ``delta`` + tests) — three disruption families:
+
+    * ``appended`` — a sorted run of n−Δ keys with Δ fresh uniform draws
+      appended unsorted (the arrival-stream / leaderboard-refill shape);
+    * ``scattered`` — a fully sorted run with Δ positions overwritten by
+      fresh uniform draws in place (the update-heavy shape — planted values
+      may be arbitrarily far from their sorted position);
+    * ``rotated`` — the leading Δ-block moved to the tail (a block rotation:
+      locally sorted everywhere but globally displaced).
+
+    ``delta_frac=0`` returns a fully sorted stream for every pattern.
+    """
+    n = int(n)
+    d = min(n, int(round(n * float(delta_frac))))
+    rng = np.random.default_rng(seed + 21)
+    if pattern == "appended":
+        base = np.sort(rng.integers(0, INT_MAX, n - d, dtype=np.int64))
+        tail = rng.integers(0, INT_MAX, d, dtype=np.int64)
+        out = np.concatenate([base, tail])
+    elif pattern == "scattered":
+        out = np.sort(rng.integers(0, INT_MAX, n, dtype=np.int64))
+        if d:
+            idx = rng.choice(n, size=d, replace=False)
+            out[idx] = rng.integers(0, INT_MAX, d, dtype=np.int64)
+    elif pattern == "rotated":
+        base = np.sort(rng.integers(0, INT_MAX, n, dtype=np.int64))
+        out = np.concatenate([base[d:], base[:d]])
+    else:
+        raise ValueError(
+            f"unknown near-sorted pattern {pattern!r} "
+            f"(use one of {NEAR_SORTED_PATTERNS})"
+        )
+    return out.astype(np.int32)
+
+
 def zipf_sizes(
     n_requests: int, total: int, seed: int = 0, alpha: float = 1.2
 ) -> np.ndarray:

@@ -96,6 +96,20 @@ def _rank_merge_two(
     wa, wb = ka.shape[0], kb.shape[0]
     w2 = wa + wb
     w_out = w2 if w_out is None else min(w_out, w2)
+    if wa == 0 or wb == 0:
+        # degenerate span (Δ=0 folds, one-run-empty merge-tree lanes): the
+        # general path would gather from a width-0 ``pos_a``, which XLA
+        # rejects — pass the populated run through, re-masking pads so a
+        # truncated w_out still leaves only valid keys followed by sentinel
+        ks, cs, vs = (ka, ca, va) if wb == 0 else (kb, cb, vb)
+        o = jnp.arange(w_out)
+        valid = o < cs
+        out = jnp.where(valid, ks[:w_out], sent)
+        vout = []
+        for v in vs:
+            m = valid.reshape((w_out,) + (1,) * (v.ndim - 1))
+            vout.append(jnp.where(m, v[:w_out], jnp.zeros((), v.dtype)))
+        return out, vout, jnp.minimum(cs, w_out)
     ra = jnp.minimum(_rank(kb, ka, "left", backend), cb)
     ia = jnp.arange(wa)
     # invalid (padded) a-entries park past every output slot, keeping pos_a

@@ -1,0 +1,31 @@
+"""Delta sort — incremental sorted-view maintenance (ROADMAP item 3).
+
+Near-sorted streams (admission queues, length buckets, leaderboards)
+don't pay the full O(n log n) ladder: only the out-of-place Δ routes
+through the fused h-relation, and one rank merge folds it into the
+standing run. See ``fold.py`` for the composite-lift construction that
+makes the result byte-identical to a cold sort, ``view.py`` for the
+stateful ``SortedView`` (folds + §5.1.1 tombstones), and ``README.md``
+for the lifecycle and cost model.
+"""
+from .fold import (
+    InFlightDeltaSort,
+    drop_positions,
+    lift_positions,
+    merge_sorted_runs,
+    near_sorted_sort,
+    near_sorted_sort_launch,
+    split_sorted_run,
+)
+from .view import SortedView
+
+__all__ = [
+    "InFlightDeltaSort",
+    "SortedView",
+    "drop_positions",
+    "lift_positions",
+    "merge_sorted_runs",
+    "near_sorted_sort",
+    "near_sorted_sort_launch",
+    "split_sorted_run",
+]

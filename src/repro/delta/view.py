@@ -1,0 +1,284 @@
+"""SortedView — a standing sorted (key, payload) snapshot that folds Δs.
+
+The view is the subsystem's stateful surface: a host-resident sorted run
+of int32 keys plus any number of aligned 1-D payload arrays, maintained
+incrementally. Two mutation routes, both byte-identical to a cold
+``bsp_sort_safe`` of the concatenated history (the stability theorem in
+``core/types.py``: every tier is stable and equal keys keep first-seen
+order, so [sorted view ++ stably-sorted Δ] merged view-first-on-ties IS
+the stable sort of the concatenation):
+
+* ``fold`` — the Δ batch is stably sorted through the existing fused
+  h-relation at a Δ-sized ``(p, Δ/p)`` layout (exact pair capacity: the
+  capacity rung is bounded by Δ, not n, and can never retry), then
+  rank-merged into the view with ``core/merge._rank_merge_two`` — one
+  ``rank_in`` + gathers, payloads riding the same permutation. Cost
+  O(Δ log Δ) device + O(n) merge vs the cold ladder's O(n log n).
+* ``resort`` — concatenate and run the ordinary segmented ladder; taken
+  when Δ is a large share of the result (``fold_max_share``) and folding
+  would approach resort cost anyway.
+
+Deletions and updates ride as **tombstones** reusing the §5.1.1 tag
+trick: duplicate tombstone values are lifted to distinct (value,
+occurrence) composites — ``occ = arange - searchsorted(t, t, 'left')`` —
+so the k-th tombstone of value v targets the k-th live occurrence of v
+in the view, found with two binary searches and applied as one masked
+compaction (delete) or one scatter (update). Misses (tombstones for
+absent keys) are counted, never fatal.
+
+Observability: ``delta.folds`` / ``delta.resorts`` / ``delta.tombstones``
+/ ``delta.tombstone_misses`` counters per view label in the unified
+registry, and ``fold`` spans (cat="delta") with traced Δ/n share when a
+tracer is attached — the inner Δ sort's route spans feed the (g, L)
+machine fit like any other sort.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro import obs
+from repro.core import TierStats
+from repro.core.api import SortExecutor
+from repro.core.segmented import pack_segments, segmented_sort_safe
+
+from .fold import merge_sorted_runs
+
+__all__ = ["SortedView"]
+
+
+class SortedView:
+    """A sorted (key, payload) snapshot maintained by Δ folds.
+
+    ``p``/``min_n_per_proc`` fix the mesh-sharded layout every device pass
+    (Δ sort or resort) uses; ``executor``/``stats`` are shared with the
+    owning service so compiled programs and retry telemetry pool. The view
+    itself lives on host between folds — it is the *output* of a sort, and
+    the device only ever sees Δ-sized work.
+    """
+
+    def __init__(
+        self,
+        *,
+        p: int = 8,
+        min_n_per_proc: int = 8,
+        executor: Optional[SortExecutor] = None,
+        stats: Optional[TierStats] = None,
+        obs_handle=None,
+        label: Optional[str] = None,
+        fold_max_share: float = 0.25,
+        merge_backend: str = "xla",
+    ) -> None:
+        self.p = p
+        self.min_n_per_proc = min_n_per_proc
+        self.executor = executor
+        self.stats = stats if stats is not None else TierStats()
+        self.fold_max_share = fold_max_share
+        self.merge_backend = merge_backend
+        self.label = label if label is not None else obs.next_instance("view")
+        self.keys = np.zeros(0, np.int32)
+        self.payloads: List[np.ndarray] = []
+        self._n_payloads: Optional[int] = None
+        self.last_tier: Optional[str] = None
+        self.last_n_per_proc = min_n_per_proc
+        self._obs_handle = obs_handle
+        self._tracer = obs.resolve_tracer(obs_handle)
+        reg = obs.metrics()
+        self._folds = reg.counter("delta.folds", view=self.label)
+        self._resorts = reg.counter("delta.resorts", view=self.label)
+        self._tombstones = reg.counter("delta.tombstones", view=self.label)
+        self._tombstone_misses = reg.counter(
+            "delta.tombstone_misses", view=self.label
+        )
+
+    # ------------------------------------------------------------ basics
+    @property
+    def n(self) -> int:
+        return int(self.keys.size)
+
+    def _coerce(self, delta_keys, delta_payloads):
+        arr = np.asarray(delta_keys, np.int32).reshape(-1)
+        pls = [np.asarray(v) for v in delta_payloads]
+        if self._n_payloads is None:
+            self._n_payloads = len(pls)
+            if not self.payloads:
+                self.payloads = [np.zeros(0, v.dtype) for v in pls]
+        elif len(pls) != self._n_payloads:
+            raise ValueError(
+                f"view carries {self._n_payloads} payload(s), "
+                f"fold brought {len(pls)}"
+            )
+        return arr, pls
+
+    def install(self, keys, payloads: Sequence[np.ndarray] = ()) -> None:
+        """Adopt an already-sorted snapshot without a device pass.
+
+        For callers that just ran the batch path (e.g. the serve engine's
+        admission sort) and hold its output: installing is free and the
+        view takes over from there with folds/tombstones.
+        """
+        arr, pls = self._coerce(keys, payloads)
+        if arr.size and np.any(arr[1:] < arr[:-1]):
+            raise ValueError("install requires sorted keys")
+        self.keys = arr
+        self.payloads = pls
+
+    def clone(self) -> "SortedView":
+        """Copy of the snapshot sharing executor/stats/label (same family)."""
+        c = SortedView(
+            p=self.p, min_n_per_proc=self.min_n_per_proc,
+            executor=self.executor, stats=self.stats,
+            obs_handle=self._obs_handle, label=self.label,
+            fold_max_share=self.fold_max_share,
+            merge_backend=self.merge_backend,
+        )
+        c.keys = self.keys.copy()
+        c.payloads = [np.array(v) for v in self.payloads]
+        c._n_payloads = self._n_payloads
+        c.last_tier = self.last_tier
+        c.last_n_per_proc = self.last_n_per_proc
+        return c
+
+    # -------------------------------------------------------------- fold
+    def _device_sort(self, arr: np.ndarray):
+        """Stably sort a host batch through the fused h-relation (exact)."""
+        packed = pack_segments(
+            [arr], self.p, min_n_per_proc=self.min_n_per_proc
+        )
+        res = segmented_sort_safe(
+            packed, stats=self.stats, executor=self.executor,
+            pair_capacity="exact", obs=self._obs_handle,
+        )
+        return res.keys[0], res.order[0], res
+
+    def fold(self, delta_keys, delta_payloads: Sequence[np.ndarray] = (),
+             *, route: Optional[str] = None) -> str:
+        """Merge a Δ batch in; returns the route taken (``fold``/``resort``).
+
+        Output state is byte-identical either way — ``route`` (and the
+        ``fold_max_share`` auto-decision it overrides) is purely a cost
+        choice. The first fold into an empty view is charged as a resort
+        (there is no standing run to rank against yet).
+        """
+        arr, pls = self._coerce(delta_keys, delta_payloads)
+        dn, n = int(arr.size), self.n
+        if route is None:
+            route = (
+                "fold"
+                if n and dn <= self.fold_max_share * (n + dn)
+                else "resort"
+            )
+        if route not in ("fold", "resort"):
+            raise ValueError(f"unknown fold route {route!r}")
+        t0 = self._tracer.now() if self._tracer is not None else 0.0
+        if route == "resort":
+            cat_k = np.concatenate([self.keys, arr])
+            cat_v = [
+                np.concatenate([old, new])
+                for old, new in zip(self.payloads, pls)
+            ]
+            if cat_k.size:
+                k, order, res = self._device_sort(cat_k)
+                self.keys = k
+                self.payloads = [cv[order] for cv in cat_v]
+                self.last_tier = res.tier
+                self.last_n_per_proc = res.n_per_proc
+            self._resorts.inc()
+        else:
+            if dn:
+                dk, dorder, res = self._device_sort(arr)
+                dvs = [v[dorder] for v in pls]
+                merged, vout = merge_sorted_runs(
+                    self.keys, dk, self.payloads, dvs,
+                    backend=self.merge_backend,
+                )
+                self.keys = merged
+                self.payloads = vout
+                self.last_n_per_proc = res.n_per_proc
+            self.last_tier = "delta"
+            self._folds.inc()
+        if self._tracer is not None:
+            self._tracer.add_span(
+                "fold", t0, cat="delta", tid="main", route=route,
+                delta_n=dn, view_n=n,
+                share=round(dn / max(n + dn, 1), 4),
+            )
+        return route
+
+    # -------------------------------------------------------- tombstones
+    def _targets(self, t: np.ndarray):
+        """View indices hit by sorted tombstone values (§5.1.1 occurrence tags)."""
+        base = np.searchsorted(self.keys, t, side="left")
+        hi = np.searchsorted(self.keys, t, side="right")
+        occ = np.arange(t.size) - np.searchsorted(t, t, side="left")
+        tgt = base + occ
+        ok = tgt < hi
+        return tgt, ok
+
+    def delete(self, keys) -> int:
+        """Tombstone-delete: k-th tombstone of v removes the k-th live v.
+
+        Returns the number of keys actually removed; tombstones with no
+        remaining occurrence count as misses (``delta.tombstone_misses``).
+        """
+        t = np.sort(np.asarray(keys, np.int32).reshape(-1))
+        if t.size == 0:
+            return 0
+        t0 = self._tracer.now() if self._tracer is not None else 0.0
+        tgt, ok = self._targets(t)
+        removed = tgt[ok]
+        if removed.size:
+            mask = np.ones(self.n, bool)
+            mask[removed] = False
+            self.keys = self.keys[mask]
+            self.payloads = [v[mask] for v in self.payloads]
+        self._tombstones.inc(int(removed.size))
+        self._tombstone_misses.inc(int(t.size - removed.size))
+        if self._tracer is not None:
+            self._tracer.add_span(
+                "tombstone", t0, cat="delta", tid="main", op="delete",
+                hits=int(removed.size), misses=int(t.size - removed.size),
+            )
+        return int(removed.size)
+
+    def update(self, keys, payloads: Sequence[np.ndarray]) -> int:
+        """Tombstone-update: rewrite payloads in place, positions untouched.
+
+        Same occurrence-tagged targeting as :meth:`delete`; an update
+        never moves a key, so stable order (and fold byte-identity going
+        forward) is preserved. Returns the hit count.
+        """
+        t_in = np.asarray(keys, np.int32).reshape(-1)
+        pls = [np.asarray(v) for v in payloads]
+        if len(pls) != (self._n_payloads or 0):
+            raise ValueError(
+                f"view carries {self._n_payloads or 0} payload(s), "
+                f"update brought {len(pls)}"
+            )
+        if t_in.size == 0:
+            return 0
+        perm = np.argsort(t_in, kind="stable")
+        t = t_in[perm]
+        tgt, ok = self._targets(t)
+        hits = int(np.count_nonzero(ok))
+        if hits:
+            self.payloads = [
+                v if v.flags.writeable else v.copy() for v in self.payloads
+            ]
+            for v, nv in zip(self.payloads, pls):
+                v[tgt[ok]] = nv[perm][ok]
+        self._tombstones.inc(hits)
+        self._tombstone_misses.inc(int(t.size - hits))
+        return hits
+
+    def pop_min(self) -> Tuple[int, Tuple]:
+        """Remove and return the front (min-key) entry and its payloads."""
+        if self.n == 0:
+            raise IndexError("pop_min from an empty SortedView")
+        k = int(self.keys[0])
+        vals = tuple(v[0] for v in self.payloads)
+        self.keys = self.keys[1:]
+        self.payloads = [v[1:] for v in self.payloads]
+        self._tombstones.inc()
+        return k, vals

@@ -11,7 +11,9 @@ Data flow (see README.md in this package):
     planner.py       CapacityPlanner: bucket → (route, starting tier, ω)
                      with JSON-persisted fault-rate feedback; balanced
                      integer-key batches take route="radix"
-                     (count-then-distribute, single exact-capacity rung)
+                     (count-then-distribute, single exact-capacity rung);
+                     near-sorted single-segment batches take route="delta"
+                     (repro.delta fold — only the out-of-place Δ moves)
 
 Consumers: ``repro.service.SortService`` (the ``pair_capacity="auto"``
 resolution), and the optional ``planner=`` policy hooks of
@@ -26,6 +28,7 @@ from .fingerprint import (
     radix_share,
     sampled_dup_fraction,
     sampled_range_bits,
+    sampled_sortedness,
 )
 from .planner import CapacityPlanner, PlanDecision
 
@@ -40,6 +43,7 @@ __all__ = [
     "radix_share",
     "sampled_dup_fraction",
     "sampled_range_bits",
+    "sampled_sortedness",
     "segment_aware_pair_cap",
     "solve_omega",
 ]

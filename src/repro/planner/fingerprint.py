@@ -47,6 +47,14 @@ from repro.core.segmented import _pow2_n_per_proc, contiguous_lane_sizes
 #: sample size per segment for the duplicate-fraction estimate
 DUP_SAMPLE = 64
 
+#: adjacent-pair sample size for the sortedness probe
+SORT_SAMPLE = 256
+
+#: quantization grain of the sortedness estimate (sixteenths) — routing
+#: thresholds compare against a coarse grid, not a noisy raw fraction, so
+#: two near-identical batches can't flap across the delta boundary
+SORT_QUANT = 16
+
 
 @dataclasses.dataclass(frozen=True)
 class Fingerprint:
@@ -62,6 +70,11 @@ class Fingerprint:
     int_key: bool = True  # integer key dtype (radix route applicability)
     key_range_bits: int = 31  # bits spanning the sampled value range
     radix_share: float = 1.0  # est. busiest range-bucket share (1.0 = worst)
+    # sampled in-order adjacent-pair share, quantized to 1/SORT_QUANT
+    # (1.0 = sorted, ~0.5 = shuffled). Probed only for single-segment int
+    # batches — the delta fold route's applicability domain; fused batches
+    # report 0.0 and never route delta.
+    sorted_frac: float = 0.0
 
     @property
     def n_segments(self) -> int:
@@ -104,6 +117,32 @@ def sampled_dup_fraction(
         return 0.0
     _, counts = np.unique(pick, return_counts=True)
     return float(counts.max() / pick.size)
+
+
+def sampled_sortedness(
+    keys: np.ndarray, sample: int = SORT_SAMPLE, seed: int = 0
+) -> float:
+    """Quantized estimate of the in-order adjacent-pair share of ``keys``.
+
+    Samples ``min(n-1, sample)`` adjacent pairs (deterministic rng) and
+    returns the fraction with ``keys[i] <= keys[i+1]``, snapped to the
+    1/``SORT_QUANT`` grid. A sorted stream scores 1.0; a shuffled one
+    ~0.5; a sorted run with Δ·n scattered updates ~1 − 2Δ (each displaced
+    key breaks at most its two incident pairs) — so the probe doubles as a
+    Δ-share estimate: Δ/n ≈ (1 − sorted_frac) / 2. Mis-estimation is a
+    cost-only risk; the delta route is byte-identical to the ladder
+    whatever the true sortedness.
+    """
+    k = np.asarray(keys).reshape(-1)
+    m = int(k.shape[0]) - 1
+    if m < 1:
+        return 1.0
+    if m <= sample:
+        idx = np.arange(m)
+    else:
+        idx = np.random.default_rng(seed).choice(m, size=sample, replace=False)
+    frac = float(np.mean(k[idx] <= k[idx + 1]))
+    return round(frac * SORT_QUANT) / SORT_QUANT
 
 
 def sampled_range_bits(samples: Sequence[np.ndarray]) -> int:
@@ -217,6 +256,11 @@ def fingerprint_arrays(
         int_key=int_key,
         key_range_bits=sampled_range_bits(picks) if int_key else 31,
         radix_share=radix_share(picks, sizes, p) if int_key else 1.0,
+        sorted_frac=(
+            sampled_sortedness(np.asarray(arrays[0]).reshape(-1), seed=seed)
+            if int_key and len(arrays) == 1
+            else 0.0
+        ),
     )
 
 

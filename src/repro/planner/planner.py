@@ -68,6 +68,18 @@ N_RUNGS = 3
 #: balanced-enough integer keys skip the splitter superstep entirely.
 RADIX_SKEW = 3.0
 
+#: route="delta" is picked when the sampled in-order adjacent-pair share
+#: (fingerprint.sampled_sortedness) is at least this high: ~0.9 means
+#: roughly ≤5% of keys are out of place, where the fold's Δ-sized device
+#: work beats every full-ladder route. Shuffled streams score ~0.5 and
+#: never qualify. A wrong verdict costs only speed — the delta route is
+#: byte-identical to the ladder by construction.
+DELTA_SORTED_MIN = 0.90
+
+#: near-sorted batches below this size take the ladder anyway — the fold's
+#: fixed host split + merge overhead dominates tiny sorts.
+DELTA_MIN_KEYS = 512
+
 
 @dataclasses.dataclass(frozen=True)
 class PlanDecision:
@@ -80,14 +92,16 @@ class PlanDecision:
     omega: Optional[float]  # solved oversampling regulator
     rung: int  # learned rung this plan started at
     # distribution route: "sample" (splitter pipeline, capacity fields
-    # above apply) or "radix" (count-then-distribute — the launch driver
+    # above apply), "radix" (count-then-distribute — the launch driver
     # sizes the single rung from the true counts, so the capacity fields
-    # are moot and retries are impossible by construction).
+    # are moot and retries are impossible by construction), or "delta"
+    # (near-sorted single-segment batch: only the out-of-place Δ routes
+    # through the h-relation, then one rank merge — repro.delta).
     route: str = "sample"
 
     @property
     def start_tier(self) -> str:
-        return "radix" if self.route == "radix" else self.pair_capacity
+        return self.route if self.route in ("radix", "delta") else self.pair_capacity
 
 
 def _quantize_cap(cap: int, n_per_proc: int, pad_align: int = 8) -> int:
@@ -117,6 +131,7 @@ class CapacityPlanner:
         reg = obs.metrics()
         self._plans = reg.counter("planner.plans", planner=self.label)
         self._radix_plans = reg.counter("planner.radix_plans", planner=self.label)
+        self._delta_plans = reg.counter("planner.delta_plans", planner=self.label)
         self._promotions = reg.counter("planner.promotions", planner=self.label)
         self._probes = reg.counter("planner.probes", planner=self.label)
         self._dirty = False  # unsaved observations (see save_if_dirty)
@@ -146,6 +161,11 @@ class CapacityPlanner:
     def radix_plans(self) -> int:
         """Plans routed count-then-distribute."""
         return self._radix_plans.value
+
+    @property
+    def delta_plans(self) -> int:
+        """Plans routed to the near-sorted fold path."""
+        return self._delta_plans.value
 
     @property
     def promotions(self) -> int:
@@ -226,6 +246,21 @@ class CapacityPlanner:
         rung = self.rung_for(bucket)
         self._plans.inc()
         layout = "contiguous" if single else "striped"
+        if (
+            single
+            and fp.int_key
+            and fp.n_keys >= DELTA_MIN_KEYS
+            and fp.sorted_frac >= DELTA_SORTED_MIN
+        ):
+            # near-sorted stream: fold, don't resort. Checked before radix —
+            # a sorted uniform stream is also perfectly range-balanced, but
+            # the fold's Δ-sized work beats even the radix route's single
+            # full-size rung. Capacity fields are moot (the Δ sort runs its
+            # own Δ-sized exact rung) and retries are impossible, mirroring
+            # the radix contract.
+            self._delta_plans.inc()
+            return PlanDecision(bucket, layout, "exact", None, None, rung,
+                                route="delta")
         if fp.int_key and fp.radix_share <= min(1.0, RADIX_SKEW / p):
             # balanced integer keys: count-then-distribute. No oversampling
             # to solve and no capacity to plan — the route's launch path
@@ -336,6 +371,7 @@ class CapacityPlanner:
         return {
             "plans": self.plans,
             "radix_plans": self.radix_plans,
+            "delta_plans": self.delta_plans,
             "buckets": len(self.history),
             "promotions": self.promotions,
             "probes": self.probes,

@@ -40,6 +40,7 @@ from repro import obs
 from repro.configs.base import ArchConfig
 from repro.core import TierStats
 from repro.data import length_bucketed_order
+from repro.delta import SortedView
 from repro.models import Model
 from repro.serve.sampling import sample
 from repro.service import ServiceConfig, SortService
@@ -177,6 +178,7 @@ class ServeEngine:
         slots: int = 4,
         max_new: Optional[Sequence[int]] = None,
         rng=None,
+        arrivals=None,
     ) -> List[np.ndarray]:
         """Serve a request queue with continuous batching.
 
@@ -185,11 +187,21 @@ class ServeEngine:
         engine's ``max_new_tokens``). Returns the generated tokens per
         request, in the original request order, truncated at EOS.
 
-        Requests are admitted in globally length-sorted order (one BSP sort
-        through the capacity ladder); a slot that retires — EOS or budget —
-        is refilled from the queue *between* decode steps, so short
-        sequences never hold the batch hostage (``self.refills`` counts
-        these mid-flight admissions).
+        Requests are admitted in globally length-sorted order: ONE cold BSP
+        sort through the service seeds a **standing length-sorted view**
+        (``repro.delta.SortedView`` — the delta subsystem's first in-tree
+        consumer), and every admission thereafter is a ``pop_min`` tombstone
+        off the view. A slot that retires — EOS or budget — is refilled from
+        the view *between* decode steps, so short sequences never hold the
+        batch hostage (``self.refills`` counts these mid-flight admissions).
+
+        ``arrivals``: optional ``step -> iterable of prompt arrays`` hook,
+        polled once per decode step while the loop runs. Arriving requests
+        **fold** into the standing view (Δ-sized device work, counted in
+        the ``delta.folds`` metric) instead of resorting the queue, inherit
+        the default token budget, and must fit the initial ``cache_len``
+        (prompt + budget); their outputs append after the initial requests'
+        in arrival order. Arrivals after the loop drains are not served.
 
         Admission is *double-buffered*: the next queued request's prefill
         is launched ahead of any retirement (JAX async dispatch — the
@@ -216,16 +228,47 @@ class ServeEngine:
         # (same rationale as the n_p bucketing in data/pipeline.py)
         cache_len = max(len(r) for r in reqs) + max(max(budgets), 1)
         cache_len = max(64, 1 << (cache_len - 1).bit_length())
-        queue = list(self.admission_order([len(r) for r in reqs]))
+        # the admission queue is a standing length-sorted SortedView keyed
+        # by prompt length with the request id as payload: seeded by one
+        # cold service sort (install is free — the sort already ordered
+        # it), popped per refill, folded into by mid-loop arrivals
+        lengths = np.asarray([len(r) for r in reqs], np.int32)
+        order = np.asarray(self.admission_order(lengths), np.int32)
+        view = SortedView(p=self.sort_p, stats=self.capacity_stats)
+        view.install(lengths[order], (order,))
+        self._admission_view = view
 
         def next_rid() -> Optional[int]:
             # zero-budget requests retire instantly with an empty stream —
             # they never occupy a slot or emit a prefill-sampled token
-            while queue:
-                rid = queue.pop(0)
+            while view.n:
+                _, (rid,) = view.pop_min()
+                rid = int(rid)
                 if budgets[rid] > 0:
                     return rid
             return None
+
+        def admit_arrivals(new_prompts) -> None:
+            # mid-loop arrivals fold into the standing view: Δ-sized device
+            # work against the queue's sorted remainder, never a resort
+            rids: List[int] = []
+            for pr in new_prompts:
+                pr = np.asarray(pr, np.int32)
+                if len(pr) + self.scfg.max_new_tokens > cache_len:
+                    raise ValueError(
+                        f"arriving prompt of {len(pr)} tokens (+ budget "
+                        f"{self.scfg.max_new_tokens}) exceeds the serving "
+                        f"cache_len {cache_len}"
+                    )
+                reqs.append(pr)
+                budgets.append(self.scfg.max_new_tokens)
+                outs.append([])
+                rids.append(len(reqs) - 1)
+            if rids:
+                view.fold(
+                    np.asarray([len(reqs[r]) for r in rids], np.int32),
+                    (np.asarray(rids, np.int32),),
+                )
 
         def admit(rid: int, k: jax.Array):
             cache, logits = self._prefill_one(reqs[rid], cache_len)
@@ -278,6 +321,11 @@ class ServeEngine:
 
         step = 0
         while any(r is not None for r in slot_req):
+            if arrivals is not None:
+                new = arrivals(step)
+                if new:
+                    admit_arrivals(new)
+                    prefetch_admission()
             # record the sampled token per lane; retire finished requests and
             # refill their slot from the queue. A freshly admitted request's
             # first token comes from its own prefill logits and is recorded
@@ -285,7 +333,22 @@ class ServeEngine:
             # EOS retires it before ever taking a decode step).
             tok_host = np.asarray(tok[:, 0])
             for s in range(n_slots):
-                tval = int(tok_host[s])
+                if slot_req[s] is None:
+                    # a lane idled when the queue drained; arrivals may have
+                    # refilled the view since — re-admit into the dead lane
+                    adm = take_admission()
+                    if adm is None:
+                        continue
+                    nxt, cache_s, tok_s = adm
+                    slot_req[s] = nxt
+                    self._refills.inc()
+                    caches = jax.tree.map(
+                        lambda full, one: full.at[s].set(one), caches, cache_s
+                    )
+                    tok = tok.at[s, 0].set(tok_s)
+                    tval = int(tok_s)
+                else:
+                    tval = int(tok_host[s])
                 while slot_req[s] is not None:
                     rid = slot_req[s]
                     outs[rid].append(tval)

@@ -43,6 +43,8 @@ import dataclasses
 import time
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro import obs
 from repro.core import TierStats
 from repro.core.api import SortExecutor
@@ -51,6 +53,7 @@ from repro.core.segmented import (
     pack_segments,
     segmented_sort_launch,
 )
+from repro.delta import SortedView, near_sorted_sort_launch
 from repro.planner import CapacityPlanner
 
 from .batch import Batch, BatchFormer
@@ -202,6 +205,11 @@ class Dispatcher:
         # queue→form→launch→flight timeline (ServiceConfig.obs; off by
         # default — every tracer touch below is guarded)
         self._tracer = obs.resolve_tracer(getattr(cfg, "obs", None))
+        # per-key-space standing views: repeat submits against the same
+        # logical stream fold into the stream's SortedView instead of
+        # resorting its whole history (see fold_stream)
+        self._stream_views: Dict[object, SortedView] = {}
+        self._stream_offsets: Dict[object, int] = {}
 
     # ----------------------------------------------- legacy telemetry views
     @property
@@ -319,6 +327,11 @@ class Dispatcher:
             min_n_per_proc=self.cfg.min_n_per_proc,
             layout=decision.layout,
         )
+        if decision.route == "delta" and len(batch.arrays) == 1:
+            # near-sorted solo batch: no packing — the delta launch splits
+            # the stream on host and routes only the out-of-place Δ through
+            # the h-relation (repro.delta). pump() branches on packed=None.
+            return None, {"route": "delta"}, decision
         overrides = {"pair_capacity": decision.pair_capacity}
         if decision.route == "radix":
             # count-then-distribute: the launch driver host-reads the exact
@@ -353,36 +366,47 @@ class Dispatcher:
             try:
                 packed, overrides, decision = self._resolve_batch(item.batch)
                 if tr is not None:
-                    tr.add_span(
-                        "form",
-                        t_form,
-                        cat="dispatch",
-                        tid=item.tid,
-                        n_per_proc=packed.n_per_proc,
-                        layout=packed.layout,
-                        n_keys=packed.n_keys,
-                    )
+                    if packed is not None:
+                        tr.add_span(
+                            "form",
+                            t_form,
+                            cat="dispatch",
+                            tid=item.tid,
+                            n_per_proc=packed.n_per_proc,
+                            layout=packed.layout,
+                            n_keys=packed.n_keys,
+                        )
                     # the fused sort traces onto the same Tracer (its own
                     # sortN lane; the launch span below links the two)
                     overrides["obs"] = self.cfg.obs
                 batch_stats = TierStats()  # isolates this batch's outcome
                 t_launch = tr.now() if tr is not None else 0.0
-                inflight = segmented_sort_launch(
-                    packed,
-                    algorithm=self.cfg.algorithm,
-                    local_sort=self.cfg.local_sort,
-                    merge=self.cfg.merge,
-                    seed=self.cfg.seed,
-                    stats=batch_stats,
-                    executor=self.executor,
-                    **overrides,
-                )
+                if packed is None:  # route="delta": near-sorted solo batch
+                    inflight = near_sorted_sort_launch(
+                        item.batch.arrays[0],
+                        self.cfg.p,
+                        min_n_per_proc=self.cfg.min_n_per_proc,
+                        executor=self.executor,
+                        stats=batch_stats,
+                        obs_handle=overrides.get("obs"),
+                    )
+                else:
+                    inflight = segmented_sort_launch(
+                        packed,
+                        algorithm=self.cfg.algorithm,
+                        local_sort=self.cfg.local_sort,
+                        merge=self.cfg.merge,
+                        seed=self.cfg.seed,
+                        stats=batch_stats,
+                        executor=self.executor,
+                        **overrides,
+                    )
             except Exception as exc:  # launch-time failure: same failsink
                 self._handle_failure(item, exc)
                 continue
             start_tier = (
-                "radix"
-                if overrides.get("route") == "radix"
+                overrides["route"]
+                if overrides.get("route") in ("radix", "delta")
                 else overrides["pair_capacity"]
             )
             if tr is not None:
@@ -392,7 +416,9 @@ class Dispatcher:
                     cat="dispatch",
                     tid=item.tid,
                     start_tier=start_tier,
-                    sort_tid=inflight.flight.trace_tid,
+                    sort_tid=getattr(
+                        getattr(inflight, "flight", None), "trace_tid", None
+                    ),
                 )
             self._launches.inc()
             if len(self._flights) >= 1:
@@ -530,6 +556,40 @@ class Dispatcher:
                 )
         self._queue.extendleft(reversed(requeue))  # keep half order at head
 
+    # ----------------------------------------------------- stream folding
+    def fold_stream(self, stream, keys) -> Tuple[np.ndarray, np.ndarray, str, int]:
+        """Fold one submit's keys into ``stream``'s standing sorted view.
+
+        The first submit against a stream installs its view (a resort —
+        there is nothing to rank against); every later submit folds: the
+        Δ batch runs the h-relation at a Δ-sized rung and rank-merges in
+        (``repro.delta.SortedView``). The view carries one payload — the
+        arrival index across the whole stream — so the returned ``order``
+        is the stable argsort of the *concatenated stream history*, exactly
+        what a cold sort of everything submitted so far would produce.
+        Returns ``(keys, order, tier, n_per_proc)`` for the full view.
+        """
+        v = self._stream_views.get(stream)
+        if v is None:
+            v = self._stream_views[stream] = SortedView(
+                p=self.cfg.p,
+                min_n_per_proc=self.cfg.min_n_per_proc,
+                executor=self.executor,
+                stats=self.stats,
+                obs_handle=getattr(self.cfg, "obs", None),
+            )
+        base = self._stream_offsets.get(stream, 0)
+        arr = np.asarray(keys, np.int32).reshape(-1)
+        pos = np.arange(base, base + arr.size, dtype=np.int64)
+        v.fold(arr, (pos,))
+        self._stream_offsets[stream] = base + arr.size
+        return (
+            v.keys.copy(),
+            v.payloads[0].copy(),
+            v.last_tier or "delta",
+            v.last_n_per_proc,
+        )
+
     def telemetry(self) -> Dict[str, int]:
         return {
             "max_in_flight": self.max_in_flight,
@@ -539,4 +599,5 @@ class Dispatcher:
             "failsink_solo_retries": self.failsink_solo_retries,
             "failsink_resolved": self.failsink_resolved,
             "failsink_errors": self.failsink_errors,
+            "stream_views": len(self._stream_views),
         }

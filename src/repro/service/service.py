@@ -237,7 +237,9 @@ class SortService:
         return self.dispatcher.start_tiers
 
     # ------------------------------------------------------------- queue
-    def submit(self, keys: np.ndarray) -> SortFuture:
+    def submit(
+        self, keys: np.ndarray, *, stream: Optional[object] = None
+    ) -> SortFuture:
         """Queue one ragged request (1-D int32 keys); returns a future.
 
         The future resolves at ``result()`` time (driving the dispatcher as
@@ -246,10 +248,34 @@ class SortService:
         triggers launch batches without blocking; the submitted request's
         result is then claimable via the returned future or
         ``take_result``.
+
+        ``stream`` opts into **incremental** semantics: submits naming the
+        same stream key share one standing sorted view, and each submit
+        folds its keys in (Δ-sized device work — ``repro.delta``) instead
+        of resorting the stream's whole history. The result covers the
+        *entire stream so far*: ``keys`` is the sorted concatenation of
+        every batch submitted to the stream, ``order`` its stable argsort
+        (int64 arrival indices). Stream folds are synchronous — each fold
+        depends on the view the previous one produced — so the future
+        returns already resolved.
         """
         arr = np.asarray(keys, np.int32).reshape(-1)
         rid = self._next_rid
         self._next_rid += 1
+        if stream is not None:
+            fut = SortFuture(rid, self._drive)
+            t0 = fut.submitted_at
+            skeys, order, tier, n_p = self.dispatcher.fold_stream(stream, arr)
+            lat = time.perf_counter() - t0
+            self._lat.observe(lat)
+            self._requests_done.inc()
+            res = RequestResult(
+                rid=rid, keys=skeys, order=order, tier=tier,
+                n_per_proc=n_p, latency_s=lat,
+            )
+            fut._resolve(res)
+            self._completed[rid] = res
+            return fut
         fut = SortFuture(rid, self._drive)
         self._pending.append(_Pending(rid, arr, fut))
         if (

@@ -1,0 +1,367 @@
+"""Delta subsystem: fold ≡ cold-resort byte-identity, the composite
+position lift, rank-merge degenerate spans, tombstones, the planner's
+sortedness probe, and the service/serve wiring."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TierStats, datagen
+from repro.core.merge import _rank_merge_two
+from repro.core.segmented import sort_segments
+from repro.delta import (
+    SortedView,
+    drop_positions,
+    lift_positions,
+    merge_sorted_runs,
+    near_sorted_sort,
+    split_sorted_run,
+)
+from repro.planner import CapacityPlanner, sampled_sortedness
+
+pytestmark = pytest.mark.fast
+
+P = 8
+
+
+def _stream(dist: str, n: int, seed: int = 0) -> np.ndarray:
+    return datagen.generate(dist, 1, n, seed=seed)[0]
+
+
+# ---------------------------------------------------- near_sorted generator
+def test_near_sorted_generator_properties():
+    for pattern in datagen.NEAR_SORTED_PATTERNS:
+        x = datagen.near_sorted(4096, 0.05, pattern, seed=3)
+        assert x.shape == (4096,) and x.dtype == np.int32
+        x0 = datagen.near_sorted(4096, 0.0, pattern, seed=3)
+        assert np.all(np.diff(x0.astype(np.int64)) >= 0), pattern
+    # appended: the base prefix stays sorted, only the tail is fresh
+    d = round(4096 * 0.05)
+    xa = datagen.near_sorted(4096, 0.05, "appended", seed=3)
+    assert np.all(np.diff(xa[: 4096 - d].astype(np.int64)) >= 0)
+    with pytest.raises(ValueError):
+        datagen.near_sorted(64, 0.1, "zigzag")
+
+
+def test_near_sorted_deterministic_in_seed():
+    a = datagen.near_sorted(1024, 0.02, "scattered", seed=7)
+    b = datagen.near_sorted(1024, 0.02, "scattered", seed=7)
+    c = datagen.near_sorted(1024, 0.02, "scattered", seed=8)
+    assert np.array_equal(a, b) and not np.array_equal(a, c)
+
+
+# ------------------------------------------------------------ host-side split
+def test_split_sorted_run_partitions_and_kept_sorted():
+    for pattern in datagen.NEAR_SORTED_PATTERNS:
+        x = datagen.near_sorted(4096, 0.02, pattern, seed=5)
+        kept, delta = split_sorted_run(x)
+        # exact partition of the index range, kept run non-decreasing
+        assert np.array_equal(
+            np.sort(np.concatenate([kept, delta])), np.arange(4096)
+        )
+        assert np.all(np.diff(x[kept].astype(np.int64)) >= 0), pattern
+
+
+def test_split_sorted_run_planted_extreme_lands_in_delta():
+    """A single planted record-high early in the run must be classified as
+    Δ (local-violation pass), not poison the running max and drop the
+    entire sorted suffix."""
+    x = np.sort(
+        np.random.default_rng(0).integers(0, 2**20, 2048, dtype=np.int64)
+    ).astype(np.int32)
+    x[10] = np.iinfo(np.int32).max  # local violator: x[10] > x[11]
+    kept, delta = split_sorted_run(x)
+    assert 10 in delta
+    assert kept.size >= 2048 - 4  # at most the plant + its neighbours drop
+
+
+def test_split_sorted_run_edges():
+    kept, delta = split_sorted_run(np.array([], np.int32))
+    assert kept.size == 0 and delta.size == 0
+    kept, delta = split_sorted_run(np.array([7], np.int32))
+    assert kept.size == 1 and delta.size == 0
+
+
+# --------------------------------------------------------- composite lift
+def test_lift_drop_roundtrip_and_stable_order():
+    rng = np.random.default_rng(1)
+    keys = rng.integers(
+        np.iinfo(np.int32).min, np.iinfo(np.int32).max, 512, dtype=np.int64
+    ).astype(np.int32)
+    keys[::7] = keys[0]  # force duplicates
+    pos = np.arange(512, dtype=np.int64)
+    comp = lift_positions(keys, pos)
+    k2, p2 = drop_positions(np.sort(comp))
+    assert np.array_equal(k2, np.sort(keys))
+    assert np.array_equal(p2, np.argsort(keys, kind="stable"))
+
+
+# ----------------------------------------- _rank_merge_two degenerate spans
+def _merged(ka, ca, kb, cb, va=(), vb=(), w_out=None):
+    sent = jnp.asarray(np.iinfo(np.int32).max, jnp.int32)
+    out, vout, cnt = _rank_merge_two(
+        jnp.asarray(ka, jnp.int32), jnp.asarray(ca),
+        jnp.asarray(kb, jnp.int32), jnp.asarray(cb),
+        sent,
+        tuple(jnp.asarray(v) for v in va),
+        tuple(jnp.asarray(v) for v in vb),
+        w_out=w_out,
+    )
+    return np.asarray(out), [np.asarray(v) for v in vout], int(cnt)
+
+
+def test_rank_merge_two_empty_a_side():
+    out, vout, cnt = _merged(
+        np.zeros(0, np.int32), 0, [3, 5, 9, 2**31 - 1], 3,
+        va=(np.zeros(0, np.int32),), vb=(np.array([30, 50, 90, 0], np.int32),),
+    )
+    assert cnt == 3 and np.array_equal(out[:3], [3, 5, 9])
+    assert out[3] == np.iinfo(np.int32).max
+    assert np.array_equal(vout[0][:3], [30, 50, 90]) and vout[0][3] == 0
+
+
+def test_rank_merge_two_empty_b_side_truncated():
+    # w_out truncation on the pass-through side must re-mask pads so the
+    # shortened run is still valid-prefix + sentinel
+    out, _, cnt = _merged(
+        [4, 8, 2**31 - 1, 2**31 - 1], 2, np.zeros(0, np.int32), 0, w_out=3
+    )
+    assert cnt == 2 and np.array_equal(out[:2], [4, 8])
+    assert out[2] == np.iinfo(np.int32).max
+
+
+def test_rank_merge_two_both_empty():
+    out, _, cnt = _merged(np.zeros(0, np.int32), 0, np.zeros(0, np.int32), 0)
+    assert cnt == 0 and out.size == 0
+
+
+def test_rank_merge_two_zero_count_with_width():
+    # width > 0 but count 0 (an all-pad lane): general path, must emit pads
+    out, _, cnt = _merged(
+        [2**31 - 1, 2**31 - 1], 0, [1, 6, 2**31 - 1, 2**31 - 1], 2
+    )
+    assert cnt == 2 and np.array_equal(out[:2], [1, 6])
+    assert np.all(out[2:] == np.iinfo(np.int32).max)
+
+
+# ------------------------------------------------------- merge_sorted_runs
+def test_merge_sorted_runs_matches_stable_reference():
+    rng = np.random.default_rng(2)
+    a = np.sort(rng.integers(0, 1000, 300, dtype=np.int64)).astype(np.int32)
+    b = np.sort(rng.integers(0, 1000, 170, dtype=np.int64)).astype(np.int32)
+    av = (np.arange(300, dtype=np.int64),)
+    bv = (np.arange(300, 470, dtype=np.int64),)
+    keys, (vals,) = merge_sorted_runs(a, b, av, bv)
+    cat = np.concatenate([a, b])
+    order = np.argsort(cat, kind="stable")  # a-first on ties = stable concat
+    assert np.array_equal(keys, cat[order])
+    assert np.array_equal(vals, np.concatenate([av[0], bv[0]])[order])
+
+
+def test_merge_sorted_runs_empty_sides():
+    a = np.sort(np.array([5, 1, 9], np.int32))
+    empty = np.array([], np.int32)
+    k1, (v1,) = merge_sorted_runs(a, empty, (a.copy(),), (empty.copy(),))
+    assert np.array_equal(k1, a) and np.array_equal(v1, a)
+    k2, (v2,) = merge_sorted_runs(empty, a, (empty.copy(),), (a.copy(),))
+    assert np.array_equal(k2, a) and np.array_equal(v2, a)
+    k3, _ = merge_sorted_runs(empty, empty)
+    assert k3.size == 0
+
+
+# ----------------------------------------------- fold ≡ resort ≡ cold sort
+@pytest.mark.parametrize("dist", ["U", "G", "B", "DD", "zipf"])
+def test_fold_byte_identity_key_only(dist):
+    base = np.sort(_stream(dist, 2048, seed=4))
+    delta = _stream(dist, 128, seed=9)
+    cat = np.concatenate([base, delta])
+    ref_k = np.sort(cat)
+    ref_o = np.argsort(cat, kind="stable")
+
+    fold_view = SortedView(p=P)
+    assert fold_view.fold(base) == "resort"  # install
+    assert fold_view.fold(delta) == "fold"
+    resort_view = SortedView(p=P)
+    resort_view.fold(base)
+    assert resort_view.fold(delta, route="resort") == "resort"
+
+    for v in (fold_view, resort_view):
+        assert np.array_equal(v.keys, ref_k)
+    # cold fused sort of the same concat as the third witness
+    cold = sort_segments([cat], P, stats=TierStats(), pair_capacity="exact")
+    assert np.array_equal(cold.keys[0], ref_k)
+    assert np.array_equal(cold.order[0], ref_o)
+
+
+@pytest.mark.parametrize("dist", ["U", "DD", "zipf"])
+def test_fold_byte_identity_with_payloads(dist):
+    base = _stream(dist, 1024, seed=6)
+    delta = _stream(dist, 200, seed=7)
+    cat = np.concatenate([base, delta])
+    pos = np.arange(cat.size, dtype=np.int64)
+    ref_o = np.argsort(cat, kind="stable")
+
+    view = SortedView(p=P)
+    view.fold(base, (pos[:1024],))
+    route = view.fold(delta, (pos[1024:],))
+    assert route == "fold"
+    assert np.array_equal(view.keys, cat[ref_o])
+    # the positional payload IS the stable argsort of the concatenation
+    assert np.array_equal(view.payloads[0], ref_o)
+
+
+def test_fold_empty_delta_and_empty_view():
+    base = np.sort(_stream("U", 512, seed=1))
+    view = SortedView(p=P)
+    view.fold(base)
+    n0 = view.n
+    view.fold(np.array([], np.int32))
+    assert view.n == n0 and np.array_equal(view.keys, base)
+    fresh = SortedView(p=P)
+    fresh.fold(np.array([], np.int32))
+    assert fresh.n == 0
+
+
+def test_fold_share_routes_to_resort():
+    view = SortedView(p=P, fold_max_share=0.25)
+    view.fold(np.sort(_stream("U", 512, seed=2)))
+    big = _stream("U", 400, seed=3)  # 400/912 > 25% of the merged view
+    assert view.fold(big) == "resort"
+    cat = np.concatenate([np.sort(_stream("U", 512, seed=2)), big])
+    assert np.array_equal(view.keys, np.sort(cat))
+
+
+# ------------------------------------------------ planner-routed delta sort
+@pytest.mark.parametrize("pattern", datagen.NEAR_SORTED_PATTERNS)
+def test_near_sorted_sort_matches_cold(pattern):
+    x = datagen.near_sorted(4096, 0.02, pattern, seed=11)
+    st = TierStats()
+    res = near_sorted_sort(x, P, stats=st)
+    assert res.tier == "delta"
+    assert st.retries == 0  # Δ rung is exact-capacity by construction
+    assert np.array_equal(res.keys[0], np.sort(x))
+    assert np.array_equal(res.order[0], np.argsort(x, kind="stable"))
+
+
+# ------------------------------------------------------------- tombstones
+def test_tombstone_delete_parity():
+    keys = np.array([1, 3, 3, 3, 7, 9, 9], np.int32)
+    view = SortedView(p=P)
+    view.install(keys, (np.arange(7, dtype=np.int64),))
+    removed = view.delete(np.array([3, 3, 5, 9], np.int32))
+    assert removed == 3  # two 3s + one 9; the 5 is a miss
+    assert np.array_equal(view.keys, [1, 3, 7, 9])
+    assert np.array_equal(view.payloads[0], [0, 3, 4, 6])  # first-occurrence
+
+
+def test_tombstone_update_in_place_preserves_order():
+    keys = np.array([2, 2, 5, 8], np.int32)
+    view = SortedView(p=P)
+    view.install(keys, (np.array([10, 11, 12, 13], np.int64),))
+    hits = view.update(
+        np.array([2, 8, 4], np.int32), (np.array([99, 88, 77], np.int64),)
+    )
+    assert hits == 2
+    assert np.array_equal(view.keys, keys)  # keys untouched
+    assert np.array_equal(view.payloads[0], [99, 11, 12, 88])
+
+
+def test_pop_min_drains_in_order():
+    view = SortedView(p=P)
+    view.install(
+        np.array([4, 6, 6], np.int32), (np.array([1, 2, 3], np.int64),)
+    )
+    assert view.pop_min() == (4, (1,))
+    assert view.pop_min() == (6, (2,))  # equal keys keep first-seen order
+    assert view.pop_min() == (6, (3,))
+    with pytest.raises(IndexError):
+        view.pop_min()
+
+
+# ------------------------------------------------------ planner probe/route
+def test_sampled_sortedness_values():
+    assert sampled_sortedness(np.arange(4096, dtype=np.int32)) == 1.0
+    shuffled = _stream("U", 4096, seed=12)
+    frac = sampled_sortedness(shuffled)
+    assert 0.3 <= frac <= 0.7  # random stream ≈ half its pairs in order
+    assert frac == round(frac * 16) / 16  # quantized to the 1/16 grid
+    assert sampled_sortedness(np.array([5], np.int32)) == 1.0
+
+
+def test_planner_routes_near_sorted_to_delta():
+    planner = CapacityPlanner()
+    x = datagen.near_sorted(2048, 0.02, "scattered", seed=13)
+    assert planner.plan([x], P).route == "delta"
+    assert planner.plan([x], P).start_tier == "delta"
+    assert planner.delta_plans >= 1
+    # shuffled stream: not near-sorted, must NOT take the fold
+    assert planner.plan([_stream("U", 2048, seed=14)], P).route != "delta"
+    # too small: below DELTA_MIN_KEYS the fold's fixed costs dominate
+    tiny = datagen.near_sorted(256, 0.02, "scattered", seed=15)
+    assert planner.plan([tiny], P).route != "delta"
+    # multi-segment batches keep the segmented path
+    two = [np.sort(_stream("U", 1024, seed=16)) for _ in range(2)]
+    assert planner.plan(two, P).route != "delta"
+
+
+# ----------------------------------------------------------- service wiring
+def test_service_routes_near_sorted_request():
+    from repro.core.api import SortExecutor
+    from repro.service import ServiceConfig, SortService
+
+    svc = SortService(ServiceConfig(p=P), executor=SortExecutor())
+    x = datagen.near_sorted(2048, 0.01, "appended", seed=17)
+    res = svc.sort_one(x)
+    assert res.tier == "delta"
+    assert np.array_equal(res.keys, np.sort(x))
+    assert np.array_equal(res.order, np.argsort(x, kind="stable"))
+    assert svc.dispatcher.start_tiers.get("delta", 0) >= 1
+
+
+def test_service_stream_submits_fold():
+    from repro.core.api import SortExecutor
+    from repro.service import ServiceConfig, SortService
+
+    svc = SortService(ServiceConfig(p=P), executor=SortExecutor())
+    stream = object()
+    a = _stream("U", 1024, seed=18)
+    b = _stream("U", 256, seed=19)
+    r1 = svc.submit(a, stream=stream).result()
+    assert np.array_equal(r1.keys, np.sort(a))
+    r2 = svc.submit(b, stream=stream).result()
+    cat = np.concatenate([a, b])
+    # the stream view covers the WHOLE history; order indexes into it
+    assert np.array_equal(r2.keys, np.sort(cat))
+    assert np.array_equal(r2.order, np.argsort(cat, kind="stable"))
+    assert r2.tier == "delta"
+    assert svc.dispatcher.telemetry()["stream_views"] == 1
+
+
+# ------------------------------------------------------------ serve wiring
+def test_serve_admission_view_and_arrivals():
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models import Model
+    from repro.serve import ServeConfig, ServeEngine
+
+    cfg = get_arch("tinyllama-1.1b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(
+        model, params, ServeConfig(max_new_tokens=4, temperature=0.0, eos_id=1)
+    )
+    rng = np.random.default_rng(20)
+    prompts = [rng.integers(5, 50, 8).astype(np.int32) for _ in range(3)]
+    late = rng.integers(5, 50, 6).astype(np.int32)
+
+    def arrivals(step):
+        return [late] if step == 1 else []
+
+    outs = eng.serve(prompts, slots=2, arrivals=arrivals)
+    assert len(outs) == 4  # the arrival joined the batch and completed
+    assert all(len(o) == 4 for o in outs)
+    ref = np.asarray(eng.generate(jnp.asarray(np.stack(prompts))))
+    for i in range(3):  # greedy ⇒ original requests byte-match lockstep
+        assert np.array_equal(outs[i], ref[i][: len(outs[i])])
+    ref_late = np.asarray(eng.generate(jnp.asarray(late[None, :])))[0]
+    assert np.array_equal(outs[3], ref_late[: len(outs[3])])

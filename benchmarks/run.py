@@ -90,6 +90,8 @@ def main() -> None:
        n_requests=48 if not args.full else 128,
        total=M // 32 if not args.full else M // 4,
        arrival_hz=400.0 if not args.full else 800.0)
+    go("chaos", tables.table_chaos, n_requests=64,
+       total=M // 32 if not args.full else M // 4)
 
     if args.json:
         for path in write_json(args.json):

@@ -468,6 +468,111 @@ def table_service_soak(
     )
 
 
+def table_chaos(n_requests=64, total=1 << 15, p=8):
+    """Chaos soak: a seeded FaultPlan against the hardened dispatch pipeline.
+
+    The same Zipf request mix runs twice through services sharing one
+    executor: once clean (the reference), once under a
+    :class:`repro.chaos.FaultPlan` injecting capacity faults (forced
+    ladder escalations), transient launch faults (failsink bisection +
+    recovery), two poison rids (terminal, must fail *naming the rid*) and
+    explicit straggler delays (feeding the EWMA monitor). The gate is the
+    recovery contract, not speed:
+
+    * ``innocents_failed`` — identity 0: every non-poison request's future
+      resolves successfully despite the faults around it;
+    * ``byte_identical`` — identity True: each innocent's sorted keys and
+      stable order match the un-faulted reference run exactly (injected
+      escalations and re-dispatches may change *which tier* serves a
+      request, never its bytes);
+    * ``poison_failed`` — identity 2: both poison futures carry a
+      ``SortServiceError`` naming their rid;
+    * ``recovered_batches`` — identity: failsink re-dispatches that
+      completed; the count is deterministic because every fault decision
+      is a pure hash of (seed, kind, key) and dispatch is FIFO;
+    * ``lat_p99_ms`` — the cost of recovery on the tail, gated under the
+      percentile tolerance.
+    """
+    from repro.chaos import FaultPlan
+    from repro.core.api import SortExecutor
+    from repro.service import ServiceConfig, SortService, SortServiceError
+
+    sizes = datagen.zipf_sizes(n_requests, total, seed=23)
+    arrays = [
+        datagen.generate("zipf", 1, int(s), seed=900 + i)[0]
+        for i, s in enumerate(sizes)
+    ]
+    poison = (11, 42)  # rids = submit order on a fresh service
+    cap = 1 << 14
+    cfg = dict(p=p, max_batch_keys=cap, max_in_flight=2)
+    ex = SortExecutor()
+    SortService(ServiceConfig(**cfg), executor=ex).sort_many(arrays)  # warm
+
+    # reference: clean service, same arrays — per-rid expected bytes
+    ref_svc = SortService(ServiceConfig(**cfg), executor=ex)
+    ref_futs = [ref_svc.submit(a) for a in arrays]
+    ref_svc.flush()
+    ref = {f.rid: f.result() for f in ref_futs}
+
+    plan = FaultPlan(
+        seed=23,
+        capacity_fault_rate=0.25,
+        capacity_fault_rungs=(0,),
+        poison_rids=poison,
+        transient_error_rate=0.35,
+        straggle_flights=(1, 5),
+        straggle_s=0.002,
+    )
+    svc = SortService(ServiceConfig(**cfg, chaos=plan), executor=ex)
+    t0 = time.time()
+    futs = [svc.submit(a) for a in arrays]
+    svc.flush()
+    wall = time.time() - t0
+
+    innocents_failed = 0
+    byte_identical = True
+    poison_failed = 0
+    for f in futs:
+        exc = f.exception()
+        if f.rid in poison:
+            if isinstance(exc, SortServiceError) and f"rid={f.rid}" in str(exc):
+                poison_failed += 1
+            continue
+        if exc is not None:
+            innocents_failed += 1
+            continue
+        r = f.result()
+        if not (
+            np.array_equal(r.keys, ref[f.rid].keys)
+            and np.array_equal(r.order, ref[f.rid].order)
+        ):
+            byte_identical = False
+    tele = svc.telemetry()
+    n_keys = int(sum(a.shape[0] for a in arrays))
+    emit(
+        "chaos",
+        {
+            "n_req": n_requests, "keys": n_keys, "p": p,
+            "poison": len(poison),
+            "injected_total": plan.injected_total,
+            "capacity_faults": plan.injected.get("capacity_fault", 0),
+            "launch_faults": plan.injected.get("launch_error", 0)
+            + plan.injected.get("poison", 0),
+            "straggles": plan.injected.get("straggle", 0),
+            "innocents_failed": innocents_failed,
+            "poison_failed": poison_failed,
+            "byte_identical": byte_identical,
+            "recovered_batches": tele["dispatch"]["recovered_batches"],
+            "failsink_splits": tele["dispatch"]["failsink_splits"],
+            "wall_s": round(wall, 4),
+            "keys_per_s": int(n_keys / max(wall, 1e-9)),
+            "lat_p50_ms": tele["lat_p50_ms"],
+            "lat_p99_ms": tele["lat_p99_ms"],
+            "retries": svc.stats.retries,
+        },
+    )
+
+
 def _hotpath_a2a_counts(p: int) -> Dict[str, int]:
     """HLO ``all_to_all`` op counts per (exchange, kv) combo (one subprocess,
     shared harness: benchmarks.common.sharded_collective_counts)."""

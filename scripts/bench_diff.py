@@ -50,10 +50,21 @@ import sys
 from typing import Dict, List, Optional, Tuple
 
 #: exact names pinned as identity fields regardless of the fragment lists
-#: below: the delta table's fold/resort route counts and its Δ split size
-#: are deterministic on seeded input — any drift is a routing/split change
-#: to fail structurally (exit 2), never a tolerated "metric" move
-_IDENTITY = ("folds", "resorts", "tombstones", "delta_n")
+#: below: the delta table's fold/resort route counts and its Δ split size,
+#: and the chaos table's recovery outcomes, are deterministic on seeded
+#: input — any drift is a routing/recovery change to fail structurally
+#: (exit 2), never a tolerated "metric" move. ``innocents_failed`` would
+#: match no direction fragment anyway, but pinning it here makes the
+#: contract explicit: a faulted run failing an innocent request is a
+#: correctness regression at any magnitude.
+_IDENTITY = (
+    "folds",
+    "resorts",
+    "tombstones",
+    "delta_n",
+    "innocents_failed",
+    "recovered_batches",
+)
 #: metric-name fragments, direction: +1 = higher is better, -1 = lower
 _HIGHER = ("speedup", "keys_per_s", "work_eff", "r2")
 _LOWER = ("wall", "lat_", "retry", "retries", "imbalance")

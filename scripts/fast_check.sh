@@ -12,9 +12,14 @@
 # p99 under bench_diff's looser percentile gate. The `obs` table rides
 # the same regen (traced h volume / imbalance / fitted (g, L)), as does
 # the `delta` table (fold vs full-resort speedup — higher-better — plus
-# the fold/resort route counts and the Δ split size as identities), and an
+# the fold/resort route counts and the Δ split size as identities), and
+# the `chaos` table (seeded FaultPlan soak: innocents_failed == 0,
+# byte-identical recovery and recovered_batches as identities). An
 # obs smoke runs one traced sort end-to-end: byte-identical output,
-# valid Chrome trace, clean span schema, working cost report. Set
+# valid Chrome trace, clean span schema, working cost report; a chaos
+# smoke runs a poisoned+faulted batch mix and asserts every innocent's
+# bytes match the un-faulted run, the poison future names its rid, and
+# a cancelled request never launches. Set
 # SKIP_BENCH=1 to skip the perf gates (e.g. on a loaded machine).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -25,7 +30,7 @@ python -m pytest -m fast -q
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   tmp="$(mktemp -d)"
   trap 'rm -rf "$tmp"' EXIT
-  python -m benchmarks.run --tables hotpath,soak,radix,obs,delta --json "$tmp" > /dev/null
+  python -m benchmarks.run --tables hotpath,soak,radix,obs,delta,chaos --json "$tmp" > /dev/null
   python scripts/bench_diff.py \
     benchmarks/baselines/BENCH_hotpath.json "$tmp/BENCH_hotpath.json" \
     --tol 0.6
@@ -40,6 +45,9 @@ if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
     --tol 0.6 --allow-missing-baseline
   python scripts/bench_diff.py \
     benchmarks/baselines/BENCH_delta.json "$tmp/BENCH_delta.json" \
+    --tol 0.6 --allow-missing-baseline
+  python scripts/bench_diff.py \
+    benchmarks/baselines/BENCH_chaos.json "$tmp/BENCH_chaos.json" \
     --tol 0.6 --allow-missing-baseline
 fi
 
@@ -118,4 +126,57 @@ assert rep["max_imbalance"] <= bound, (rep["max_imbalance"], bound)
 print(f"obs smoke: traced sort byte-identical, valid Chrome trace "
       f"({len(rows)} route span(s)), imbalance "
       f"{rep['max_imbalance']:.3f} <= {bound:.3f} OK")
+EOF
+
+python - <<'EOF'
+# chaos smoke: a seeded FaultPlan (capacity faults + a poison rid +
+# transient launch faults) over a Zipf request mix — every innocent
+# request's bytes must match the un-faulted run exactly, the poison
+# future must fail with a SortServiceError naming its rid, and a
+# cancelled request must never launch.
+import numpy as np
+from repro.chaos import FaultPlan
+from repro.core import datagen
+from repro.core.api import SortExecutor
+from repro.service import (ServiceConfig, SortCancelledError, SortService,
+                           SortServiceError)
+
+arrays = [datagen.generate("zipf", 1, int(s), seed=100 + i)[0]
+          for i, s in enumerate(datagen.zipf_sizes(16, 8192, seed=7))]
+ex = SortExecutor()
+cfg = dict(p=8, max_batch_keys=1 << 13)
+
+ref_svc = SortService(ServiceConfig(**cfg), executor=ex)
+ref = {f.rid: f for f in [ref_svc.submit(a) for a in arrays]}
+ref_svc.flush()
+
+plan = FaultPlan(seed=7, poison_rids=(3,), capacity_fault_rate=0.5,
+                 capacity_fault_rungs=(0,), transient_error_rate=0.5)
+svc = SortService(ServiceConfig(**cfg, chaos=plan), executor=ex)
+futs = [svc.submit(a) for a in arrays]
+svc.flush()
+for f in futs:
+    if f.rid == 3:
+        exc = f.exception()
+        assert isinstance(exc, SortServiceError) and "rid=3" in str(exc), exc
+        continue
+    assert f.exception() is None, (f.rid, f.exception())
+    r, r0 = f.result(), ref[f.rid].result()
+    assert np.array_equal(r.keys, r0.keys), f"rid {f.rid} keys diverged"
+    assert np.array_equal(r.order, r0.order), f"rid {f.rid} order diverged"
+assert plan.injected_total > 0, "chaos plan injected nothing"
+
+# cancellation: an unformed request unpicks cleanly and never launches
+svc2 = SortService(ServiceConfig(**cfg), executor=ex)
+fut = svc2.submit(arrays[0])
+assert fut.cancel() and fut.cancelled()
+assert svc2.dispatcher.launches == 0, "cancelled request launched"
+try:
+    fut.result()
+    raise AssertionError("cancelled future resolved with a result")
+except SortCancelledError:
+    pass
+print(f"chaos smoke: {plan.injected_total} injected fault(s) "
+      f"({plan.injected}), innocents byte-identical, poison names rid, "
+      f"cancel never launches OK")
 EOF

@@ -113,6 +113,7 @@ from .sort_radix import (
 )
 from .sort_ran import prepare_ran_spmd, route_ran_spmd, sort_ran_spmd
 from .types import AXIS, PreparedSort, SortConfig, SortResult
+from ..chaos import resolve_chaos
 from ..obs import REGISTRY as _OBS
 from ..obs import resolve_tracer
 
@@ -217,9 +218,10 @@ def bsp_sort_sharded(
     p, n_p = x.shape
     if cfg is None:
         cfg = SortConfig(p=p, n_per_proc=n_p, **overrides)
-    if cfg.obs is not None:
-        # obs is hash-excluded, but strip it so executor keys never pin it
-        cfg = dataclasses.replace(cfg, obs=None)
+    if cfg.obs is not None or cfg.chaos is not None:
+        # obs/chaos are hash-excluded, but strip them so executor keys
+        # never pin a Tracer or FaultPlan
+        cfg = dataclasses.replace(cfg, obs=None, chaos=None)
     if rng is None:
         rng = jax.random.key(cfg.seed)
     ex = executor if executor is not None else _EXECUTOR
@@ -555,6 +557,7 @@ class InFlightSort:
         on_complete: Optional[Callable] = None,
         tracer=None,
         trace_meta: Optional[Dict] = None,
+        chaos=None,
     ) -> None:
         self.stats = stats if stats is not None else TierStats()
         self._ladder = ladder
@@ -563,6 +566,12 @@ class InFlightSort:
         self._scope = scope if scope is not None else contextlib.nullcontext
         self._on_complete = on_complete
         self._tracer = tracer
+        # chaos capacity-fault injection: a host-side flip of the overflow
+        # decision for non-terminal rungs only (repro.chaos.FaultPlan) —
+        # the escalation it forces is the real recovery path, and the next
+        # rung's result is byte-identical to an unfaulted run's
+        self._chaos = chaos
+        self._chaos_key = chaos.next_sort() if chaos is not None else 0
         self._meta = trace_meta if trace_meta is not None else {}
         #: timeline lane of this sort's spans (None when untraced) — the
         #: segmented service uses it to attach its own points to the lane.
@@ -616,6 +625,21 @@ class InFlightSort:
             tier, tier_cfg = self._ladder[self._i]
             t_sync = self._tracer.now() if self._tracer is not None else 0.0
             ok = not bool(res.overflow)  # host sync: the retry decision point
+            if (
+                ok
+                and self._chaos is not None
+                and self._i + 1 < len(self._ladder)  # never fault terminal
+                and self._chaos.fault_capacity(self._chaos_key, self._i)
+            ):
+                ok = False  # injected capacity fault: walk the next rung
+                if self._tracer is not None:
+                    self._tracer.point(
+                        "chaos_capacity_fault",
+                        cat="chaos",
+                        tid=self.trace_tid or "main",
+                        rung=self._i,
+                        tier=tier,
+                    )
             if self._tracer is not None:
                 self._record_route(res, tier, tier_cfg, ok, t_sync)
             self.stats.record(tier, ok)
@@ -794,11 +818,13 @@ def bsp_sort_safe_launch(
     if cfg is None:
         cfg = SortConfig(p=p, n_per_proc=n_p, **overrides)
     tracer = resolve_tracer(cfg.obs)
-    if cfg.obs is not None:
-        # Hold the tracer as a local only: the cfg the ladder/executor see
-        # carries obs=None, so registry keys never pin a Tracer. (obs is
-        # hash/compare-excluded — this changes no cache key.)
-        cfg = dataclasses.replace(cfg, obs=None)
+    chaos = resolve_chaos(cfg.chaos)
+    if cfg.obs is not None or cfg.chaos is not None:
+        # Hold the tracer/chaos plan as locals only: the cfg the ladder/
+        # executor see carries obs=None/chaos=None, so registry keys never
+        # pin a Tracer or FaultPlan. (Both are hash/compare-excluded —
+        # this changes no cache key.)
+        cfg = dataclasses.replace(cfg, obs=None, chaos=None)
     meta = _trace_meta_for(tracer, x, values)
     if rng is None:
         rng = jax.random.key(cfg.seed)
@@ -884,6 +910,7 @@ def bsp_sort_safe_launch(
         on_complete=on_complete,
         tracer=tracer,
         trace_meta=meta,
+        chaos=chaos,
     )
 
 
@@ -944,8 +971,10 @@ def bsp_sort_sharded_safe(
     if cfg is None:
         cfg = SortConfig(p=p, n_per_proc=n_p, **overrides)
     tracer = resolve_tracer(cfg.obs)
-    if cfg.obs is not None:
-        cfg = dataclasses.replace(cfg, obs=None)
+    if cfg.obs is not None or cfg.chaos is not None:
+        # chaos injection targets the vmapped service path; the sharded
+        # driver only strips the handle so executor keys stay clean
+        cfg = dataclasses.replace(cfg, obs=None, chaos=None)
     meta = _trace_meta_for(tracer, x, values)
     if rng is None:
         rng = jax.random.key(cfg.seed)

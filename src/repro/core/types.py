@@ -134,6 +134,13 @@ class SortConfig:
     obs: Optional[object] = dataclasses.field(
         default=None, compare=False, repr=False
     )
+    # Chaos handle (repro.chaos.FaultPlan or None), hash/compare-excluded
+    # for the same reason as ``obs``: a faulted and a clean config are
+    # EQUAL and share compiled programs — every injection is a host-side
+    # decision at a driver boundary, never a traced-code branch.
+    chaos: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
 
     # ------------------------------------------------------------------ math
     @property
@@ -339,6 +346,7 @@ class SortConfig:
             # hash-excluded anyway, but dropped so executor-registry keys
             # never pin a Tracer (and its span buffers) for process lifetime
             obs=None,
+            chaos=None,
         )
 
     def validate(self) -> None:

@@ -26,6 +26,12 @@ in the view, found with two binary searches and applied as one masked
 compaction (delete) or one scatter (update). Misses (tombstones for
 absent keys) are counted, never fatal.
 
+Robustness: every fold's merged run is validated for monotonicity; a
+corrupted Δ (injected via ``repro.chaos`` fold corruption, or organic)
+triggers a fallback resort from the preserved pre-fold state
+(``delta.fold_fallback_resorts``) — the view is byte-identical to the
+cold sort either way.
+
 Observability: ``delta.folds`` / ``delta.resorts`` / ``delta.tombstones``
 / ``delta.tombstone_misses`` counters per view label in the unified
 registry, and ``fold`` spans (cat="delta") with traced Δ/n share when a
@@ -66,6 +72,7 @@ class SortedView:
         executor: Optional[SortExecutor] = None,
         stats: Optional[TierStats] = None,
         obs_handle=None,
+        chaos_handle=None,
         label: Optional[str] = None,
         fold_max_share: float = 0.25,
         merge_backend: str = "xla",
@@ -84,9 +91,16 @@ class SortedView:
         self.last_n_per_proc = min_n_per_proc
         self._obs_handle = obs_handle
         self._tracer = obs.resolve_tracer(obs_handle)
+        # chaos: fold-corruption injection (repro.chaos.FaultPlan or None);
+        # imported lazily by the resolver at the service layer — the view
+        # only calls corrupt_fold/next_fold, duck-typed like the tracer
+        self._chaos_handle = chaos_handle
         reg = obs.metrics()
         self._folds = reg.counter("delta.folds", view=self.label)
         self._resorts = reg.counter("delta.resorts", view=self.label)
+        self._fold_fallbacks = reg.counter(
+            "delta.fold_fallback_resorts", view=self.label
+        )
         self._tombstones = reg.counter("delta.tombstones", view=self.label)
         self._tombstone_misses = reg.counter(
             "delta.tombstone_misses", view=self.label
@@ -129,7 +143,8 @@ class SortedView:
         c = SortedView(
             p=self.p, min_n_per_proc=self.min_n_per_proc,
             executor=self.executor, stats=self.stats,
-            obs_handle=self._obs_handle, label=self.label,
+            obs_handle=self._obs_handle, chaos_handle=self._chaos_handle,
+            label=self.label,
             fold_max_share=self.fold_max_share,
             merge_backend=self.merge_backend,
         )
@@ -186,18 +201,52 @@ class SortedView:
                 self.last_n_per_proc = res.n_per_proc
             self._resorts.inc()
         else:
+            fell_back = False
             if dn:
                 dk, dorder, res = self._device_sort(arr)
                 dvs = [v[dorder] for v in pls]
+                ch = self._chaos_handle
+                if ch is not None and ch.corrupt_fold(ch.next_fold()):
+                    # injected corruption: clobber the sorted Δ run the way
+                    # a bad fold input would look (reversed run) — the
+                    # validation below must catch it
+                    dk = dk[::-1].copy()
                 merged, vout = merge_sorted_runs(
                     self.keys, dk, self.payloads, dvs,
                     backend=self.merge_backend,
                 )
-                self.keys = merged
-                self.payloads = vout
-                self.last_n_per_proc = res.n_per_proc
-            self.last_tier = "delta"
-            self._folds.inc()
+                if merged.size and np.any(merged[1:] < merged[:-1]):
+                    # merged run is not sorted: a corrupted fold input
+                    # (injected or organic) slipped through. The pre-fold
+                    # state is still unmutated — fall back to a full
+                    # resort of the concatenated history, so the view
+                    # stays byte-identical to the cold sort either way.
+                    fell_back = True
+                    self._fold_fallbacks.inc()
+                    if self._tracer is not None:
+                        self._tracer.point(
+                            "fold_corruption_fallback", cat="chaos",
+                            tid="main", delta_n=dn, view_n=n,
+                        )
+                    cat_k = np.concatenate([self.keys, arr])
+                    cat_v = [
+                        np.concatenate([old, new])
+                        for old, new in zip(self.payloads, pls)
+                    ]
+                    k, order, res = self._device_sort(cat_k)
+                    self.keys = k
+                    self.payloads = [cv[order] for cv in cat_v]
+                    self.last_tier = res.tier
+                    self.last_n_per_proc = res.n_per_proc
+                    self._resorts.inc()
+                    route = "resort"
+                else:
+                    self.keys = merged
+                    self.payloads = vout
+                    self.last_n_per_proc = res.n_per_proc
+            if not fell_back:
+                self.last_tier = "delta"
+                self._folds.inc()
         if self._tracer is not None:
             self._tracer.add_span(
                 "fold", t0, cat="delta", tid="main", route=route,

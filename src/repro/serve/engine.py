@@ -43,7 +43,7 @@ from repro.data import length_bucketed_order
 from repro.delta import SortedView
 from repro.models import Model
 from repro.serve.sampling import sample
-from repro.service import ServiceConfig, SortService
+from repro.service import ServiceConfig, SortService, SortServiceError
 
 
 def _mesh_sort_p(mesh) -> int:
@@ -90,6 +90,9 @@ class ServeEngine:
         self._admission_prefetches = reg.counter(
             "serve.admission_prefetches", engine=self.label
         )
+        self._admission_fallbacks = reg.counter(
+            "serve.admission_fallbacks", engine=self.label
+        )
         self._decode = jax.jit(
             lambda p, c, t: model.decode_step(p, c, t, None)
         )
@@ -113,6 +116,11 @@ class ServeEngine:
         """Prefills launched ahead of retirement."""
         return self._admission_prefetches.value
 
+    @property
+    def admission_fallbacks(self) -> int:
+        """Admissions served by bucketed order after a sort-service failure."""
+        return self._admission_fallbacks.value
+
     def admission_order(self, prompt_lengths, p: Optional[int] = None) -> np.ndarray:
         """Globally length-sorted admission order for a request queue.
 
@@ -128,7 +136,17 @@ class ServeEngine:
         lengths = np.asarray(prompt_lengths, np.int32)
         if p is not None and p != self.sort_p:
             return length_bucketed_order(lengths, p=p, stats=self.capacity_stats)
-        return self.sort_service.sort_one(lengths).order
+        try:
+            return self.sort_service.sort_one(lengths).order
+        except SortServiceError:
+            # graceful degradation: a terminally failing sort service must
+            # not take admission down with it — the host-side bucketed
+            # order is weaker (bucket-stable, not globally key-stable) but
+            # every request is still admitted exactly once
+            self._admission_fallbacks.inc()
+            return length_bucketed_order(
+                lengths, p=self.sort_p, stats=self.capacity_stats
+            )
 
     def generate(self, prompts: jnp.ndarray, extras: Optional[Dict] = None, rng=None):
         """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32."""

@@ -17,10 +17,14 @@ serving/data consumers).
                      overlaps batch k's device collectives) plus failsink
                      per-request fault isolation (bisect a failed batch
                      until the poison request stands alone).
-    SortFuture     — submit()'s handle: done()/result()/exception(), the
-                     failsink telemetry mark, and a cached result that
-                     survives unclaimed-store eviction.
+    SortFuture     — submit()'s handle: done()/result()/exception()/
+                     cancel(), the failsink telemetry mark, and a cached
+                     result that survives unclaimed-store eviction.
     SortServiceError — terminal per-request failure, naming its rids.
+    SortTimeoutError — a submit(deadline_s=...) request expired before its
+                     batch launched (subclass of SortServiceError).
+    SortCancelledError — a request was cancel()ed before launch (subclass
+                     of SortServiceError).
     BatchFormer    — the pow2 length-bucketed batch former (bounds XLA
                      recompiles to one program per bucket shape).
     ServiceConfig  — p / algorithm / capacity-tier / bucketing / auto-flush
@@ -28,7 +32,13 @@ serving/data consumers).
     RequestResult  — per-request output record (+ failsink mark).
 """
 from .batch import Batch, BatchFormer
-from .dispatch import Dispatcher, SortFuture, SortServiceError
+from .dispatch import (
+    Dispatcher,
+    SortCancelledError,
+    SortFuture,
+    SortServiceError,
+    SortTimeoutError,
+)
 from .service import RequestResult, ServiceConfig, SortService
 
 __all__ = [
@@ -37,7 +47,9 @@ __all__ = [
     "Dispatcher",
     "RequestResult",
     "ServiceConfig",
+    "SortCancelledError",
     "SortFuture",
     "SortService",
     "SortServiceError",
+    "SortTimeoutError",
 ]

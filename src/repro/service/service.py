@@ -47,6 +47,7 @@ instance (and every other sort caller) shares compiled programs per bucket.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import warnings
 from typing import Deque, Dict, List, Optional, Sequence, Union
@@ -58,7 +59,13 @@ from repro.core import TierStats
 from repro.core.api import SortExecutor, default_executor
 from repro.planner import CapacityPlanner
 from repro.service.batch import BatchFormer
-from repro.service.dispatch import Dispatcher, SortFuture, SortServiceError
+from repro.service.dispatch import (
+    Dispatcher,
+    SortCancelledError,
+    SortFuture,
+    SortServiceError,
+    SortTimeoutError,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,10 +105,31 @@ class ServiceConfig:
     # unclaimed results (each eviction counts in ``evicted_results``; the
     # result stays cached on its SortFuture). None disables the bound.
     max_unclaimed: Optional[int] = 1024
+    # failure hardening (repro.service.dispatch docstring has the model):
+    # failsink re-enqueues back off failsink_backoff_s · 2^attempt (capped
+    # at failsink_backoff_max_s) before relaunch eligibility; 0 restores
+    # immediate retry. A failsink lineage past fault_retry_budget
+    # generations stops bisecting and isolates every rid solo at once.
+    failsink_backoff_s: float = 0.0
+    failsink_backoff_max_s: float = 1.0
+    fault_retry_budget: int = 8
+    # circuit breaker: breaker_threshold consecutive failed launches in one
+    # pow2 bucket degrade the bucket from fused batches to per-request
+    # exact sorts for breaker_cooldown_s (0 disables the breaker)
+    breaker_threshold: int = 4
+    breaker_cooldown_s: float = 30.0
     # Observability handle (repro.obs.Tracer or None), hash/compare-excluded
     # like SortConfig.obs: the dispatcher records its queue→form→launch→
     # flight timeline on it and threads it into every fused sort launch.
     obs: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
+    # Chaos handle (repro.chaos.FaultPlan or None), hash/compare-excluded
+    # like ``obs``: deterministic seeded fault injection across the
+    # dispatch path (launch faults, stragglers), the capacity ladder and
+    # the delta views. A faulted service runs the same compiled programs
+    # as a clean one.
+    chaos: Optional[object] = dataclasses.field(
         default=None, compare=False, repr=False
     )
 
@@ -169,6 +197,12 @@ class SortService:
         self._pending: List[_Pending] = []
         self._completed: Dict[int, RequestResult] = {}  # unclaimed results
         self._next_rid = 0
+        # submit/flush/drive share queue state; the RLock makes them safe
+        # to call from a background driver thread (start_driver) alongside
+        # the submitting thread. Reentrant: _drive flushes under the lock.
+        self._lock = threading.RLock()
+        self._driver: Optional[threading.Thread] = None
+        self._driver_stop = threading.Event()
         # telemetry — lives in the process-wide metrics registry under the
         # dispatcher's instance label (one label per service). The latency
         # histogram keeps a bounded window (a long-lived serving process
@@ -183,6 +217,12 @@ class SortService:
             "service.requests_failed", svc=self.label
         )
         self._evicted = reg.counter("service.evicted_results", svc=self.label)
+        self._cancelled = reg.counter(
+            "service.cancelled_requests", svc=self.label
+        )
+        self._deadline_timeouts = reg.counter(
+            "service.deadline_timeouts", svc=self.label
+        )
 
     # ----------------------------------------------- registry metric views
     @property
@@ -238,7 +278,11 @@ class SortService:
 
     # ------------------------------------------------------------- queue
     def submit(
-        self, keys: np.ndarray, *, stream: Optional[object] = None
+        self,
+        keys: np.ndarray,
+        *,
+        stream: Optional[object] = None,
+        deadline_s: Optional[float] = None,
     ) -> SortFuture:
         """Queue one ragged request (1-D int32 keys); returns a future.
 
@@ -248,6 +292,15 @@ class SortService:
         triggers launch batches without blocking; the submitted request's
         result is then claimable via the returned future or
         ``take_result``.
+
+        ``deadline_s`` bounds the *un-launched* wait: a request still
+        queued (pending here, or formed in the dispatcher queue) when the
+        deadline passes is expired by the deadline sweeps
+        (:meth:`run_pending`, any flush entry) and its future resolves
+        with a :class:`SortTimeoutError` naming the rid. Once its batch
+        launches the deadline no longer applies — completing paid-for
+        device work is strictly better than discarding it. The returned
+        future also supports ``cancel()`` while un-launched.
 
         ``stream`` opts into **incremental** semantics: submits naming the
         same stream key share one standing sorted view, and each submit
@@ -260,32 +313,38 @@ class SortService:
         returns already resolved.
         """
         arr = np.asarray(keys, np.int32).reshape(-1)
-        rid = self._next_rid
-        self._next_rid += 1
-        if stream is not None:
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            if stream is not None:
+                fut = SortFuture(rid, self._drive)
+                t0 = fut.submitted_at
+                skeys, order, tier, n_p = self.dispatcher.fold_stream(
+                    stream, arr
+                )
+                lat = time.perf_counter() - t0
+                self._lat.observe(lat)
+                self._requests_done.inc()
+                res = RequestResult(
+                    rid=rid, keys=skeys, order=order, tier=tier,
+                    n_per_proc=n_p, latency_s=lat,
+                )
+                fut._resolve(res)
+                self._completed[rid] = res
+                return fut
             fut = SortFuture(rid, self._drive)
-            t0 = fut.submitted_at
-            skeys, order, tier, n_p = self.dispatcher.fold_stream(stream, arr)
-            lat = time.perf_counter() - t0
-            self._lat.observe(lat)
-            self._requests_done.inc()
-            res = RequestResult(
-                rid=rid, keys=skeys, order=order, tier=tier,
-                n_per_proc=n_p, latency_s=lat,
-            )
-            fut._resolve(res)
-            self._completed[rid] = res
+            if deadline_s is not None:
+                fut.deadline_at = fut.submitted_at + float(deadline_s)
+            fut._canceller = self._cancel
+            self._pending.append(_Pending(rid, arr, fut))
+            if (
+                self.cfg.max_pending is not None
+                and len(self._pending) >= self.cfg.max_pending
+            ):
+                self.flush_async(trigger="size")
+            else:
+                self.maybe_flush()
             return fut
-        fut = SortFuture(rid, self._drive)
-        self._pending.append(_Pending(rid, arr, fut))
-        if (
-            self.cfg.max_pending is not None
-            and len(self._pending) >= self.cfg.max_pending
-        ):
-            self.flush_async(trigger="size")
-        else:
-            self.maybe_flush()
-        return fut
 
     def maybe_flush(self) -> bool:
         """Deadline check: launch the queue if the oldest request is overdue.
@@ -318,16 +377,18 @@ class SortService:
         overlapping any in-flight device work). Returns whether anything
         was enqueued.
         """
-        todo, self._pending = self._pending, []
-        if todo:
-            self._count_flush(trigger)
-        fut_by_rid = {r.rid: r.future for r in todo}
-        for batch in self.former.form([(r.rid, r.keys) for r in todo]):
-            self.dispatcher.enqueue(
-                batch, {rid: fut_by_rid[rid] for rid in batch.rids}
-            )
-        self.dispatcher.pump()
-        return bool(todo)
+        with self._lock:
+            self._expire_deadlines()
+            todo, self._pending = self._pending, []
+            if todo:
+                self._count_flush(trigger)
+            fut_by_rid = {r.rid: r.future for r in todo}
+            for batch in self.former.form([(r.rid, r.keys) for r in todo]):
+                self.dispatcher.enqueue(
+                    batch, {rid: fut_by_rid[rid] for rid in batch.rids}
+                )
+            self.dispatcher.pump()
+            return bool(todo)
 
     def flush_ready(self, min_keys: Optional[int] = None) -> bool:
         """Admission-aware launch for open-loop arrival pumps.
@@ -338,22 +399,24 @@ class SortService:
         ``flush`` clears it, so nothing starves. Non-blocking; returns
         whether any batch launched.
         """
-        todo, self._pending = self._pending, []
-        fut_by_rid = {r.rid: r.future for r in todo}
-        batches, held = self.former.form_ready(
-            [(r.rid, r.keys) for r in todo], min_keys=min_keys
-        )
-        if batches:
-            self._count_flush("ready")
-        for batch in batches:
-            self.dispatcher.enqueue(
-                batch, {rid: fut_by_rid[rid] for rid in batch.rids}
+        with self._lock:
+            self._expire_deadlines()
+            todo, self._pending = self._pending, []
+            fut_by_rid = {r.rid: r.future for r in todo}
+            batches, held = self.former.form_ready(
+                [(r.rid, r.keys) for r in todo], min_keys=min_keys
             )
-        self._pending = [
-            _Pending(rid, keys, fut_by_rid[rid]) for rid, keys in held
-        ] + self._pending
-        self.dispatcher.pump()
-        return bool(batches)
+            if batches:
+                self._count_flush("ready")
+            for batch in batches:
+                self.dispatcher.enqueue(
+                    batch, {rid: fut_by_rid[rid] for rid in batch.rids}
+                )
+            self._pending = [
+                _Pending(rid, keys, fut_by_rid[rid]) for rid, keys in held
+            ] + self._pending
+            self.dispatcher.pump()
+            return bool(batches)
 
     def flush(self, trigger: str = "manual") -> Dict[int, RequestResult]:
         """Sort everything queued; one fused segmented sort per batch.
@@ -366,24 +429,135 @@ class SortService:
         result from the store. A failed request does NOT raise here — its
         future (and ``take_result``) carries the :class:`SortServiceError`.
         """
-        self.flush_async(trigger)
-        try:
-            self.dispatcher.drain()
-        finally:
-            # one history write per flush (not per batch), raise or not.
-            # Persistence is telemetry, not dispatch: an unwritable path
-            # must neither fail completed sorts nor mask a batch exception.
+        with self._lock:
+            self.flush_async(trigger)
             try:
-                self.planner.save_if_dirty()
-            except OSError as e:
-                warnings.warn(f"planner history not persisted: {e}")
-        return dict(self._completed)
+                self.dispatcher.drain()
+            finally:
+                # one history write per flush (not per batch), raise or not.
+                # Persistence is telemetry, not dispatch: an unwritable path
+                # must neither fail completed sorts nor mask a batch
+                # exception.
+                try:
+                    self.planner.save_if_dirty()
+                except OSError as e:
+                    warnings.warn(f"planner history not persisted: {e}")
+            return dict(self._completed)
 
     def _drive(self, fut: SortFuture) -> None:
         """SortFuture's engine: launch anything queued, run until it lands."""
-        if any(r.rid == fut.rid for r in self._pending):
-            self.flush_async(trigger="claim")
-        self.dispatcher.drive(fut)
+        with self._lock:
+            if any(r.rid == fut.rid for r in self._pending):
+                self.flush_async(trigger="claim")
+            self.dispatcher.drive(fut)
+
+    # ------------------------------------- deadlines, cancellation, driver
+    def _cancel(self, fut: SortFuture) -> bool:
+        """``SortFuture.cancel()``'s backend: unpick an un-launched request.
+
+        Pending requests are removed from the submit queue; formed-but-
+        queued ones are unpicked from their batch in the dispatcher (the
+        batch re-forms without them). A launched/resolved request reports
+        False and runs to completion. On success the future resolves with
+        a :class:`SortCancelledError` — the request never launches.
+        """
+        with self._lock:
+            if fut.done():
+                return False
+            was_pending = any(r.rid == fut.rid for r in self._pending)
+            if was_pending:
+                self._pending = [r for r in self._pending if r.rid != fut.rid]
+            elif not self.dispatcher.cancel_rid(fut.rid):
+                return False
+            self._cancelled.inc()
+            fut._fail(
+                SortCancelledError(
+                    f"request rid={fut.rid} cancelled before launch",
+                    rids=(fut.rid,),
+                )
+            )
+            return True
+
+    def _expire_deadlines(self, now: Optional[float] = None) -> int:
+        """Fail every un-launched request whose deadline passed.
+
+        Sweeps both queues: requests still pending here, and requests
+        formed into the dispatcher's batch queue (its own sweep unpicks
+        them). Launched requests are never expired.
+        """
+        with self._lock:
+            now = time.perf_counter() if now is None else now
+            expired = [
+                r
+                for r in self._pending
+                if r.future.deadline_at is not None
+                and now >= r.future.deadline_at
+                and not r.future.done()
+            ]
+            if expired:
+                dead = {r.rid for r in expired}
+                self._pending = [
+                    r for r in self._pending if r.rid not in dead
+                ]
+                for r in expired:
+                    self._deliver_failure(
+                        r.future,
+                        SortTimeoutError(
+                            f"request rid={r.rid} expired un-launched "
+                            f"(deadline passed while pending)",
+                            rids=(r.rid,),
+                        ),
+                    )
+            return len(expired) + self.dispatcher.expire_deadlines(now)
+
+    def run_pending(self, max_steps: int = 1) -> bool:
+        """Driver pump: advance time-triggered work without a submitter.
+
+        One call expires overdue deadlines (pending + formed), fires the
+        ``flush_after_s`` auto-flush if the oldest pending request is
+        overdue — so a quiet service still flushes without anyone
+        submitting or claiming — and lets the dispatcher launch
+        backoff-due batches and complete up to ``max_steps`` flights.
+        Callable from a thread (:meth:`start_driver`) or polled from an
+        event loop. Returns whether work remains.
+        """
+        with self._lock:
+            self._expire_deadlines()
+            self.maybe_flush()
+            busy = self.dispatcher.run_pending(max_steps=max_steps)
+            return busy or bool(self._pending)
+
+    def start_driver(self, interval_s: float = 0.002) -> None:
+        """Run :meth:`run_pending` on a daemon thread every ``interval_s``.
+
+        Idempotent. With a driver running, deadline flushes, backoff
+        retries and deadline expirations proceed while every caller thread
+        is idle; futures resolve in the background and ``result()`` returns
+        without driving.
+        """
+        with self._lock:
+            if self._driver is not None and self._driver.is_alive():
+                return
+            self._driver_stop.clear()
+
+            def _loop() -> None:
+                while not self._driver_stop.wait(interval_s):
+                    self.run_pending(max_steps=1)
+
+            self._driver = threading.Thread(
+                target=_loop, name=f"sort-service-driver-{self.label}",
+                daemon=True,
+            )
+            self._driver.start()
+
+    def stop_driver(self) -> None:
+        """Stop the driver thread (waits for the current pump to finish)."""
+        t = self._driver
+        if t is None:
+            return
+        self._driver_stop.set()
+        t.join(timeout=5.0)
+        self._driver = None
 
     # -------------------------------------------------------- completion
     def _deliver(self, fut: SortFuture, keys, order, tier, n_per_proc) -> None:
@@ -410,6 +584,8 @@ class SortService:
 
     def _deliver_failure(self, fut: SortFuture, exc: BaseException) -> None:
         self._requests_failed.inc()
+        if isinstance(exc, SortTimeoutError):
+            self._deadline_timeouts.inc()
         fut._fail(exc)
 
     def take_result(
@@ -496,6 +672,8 @@ class SortService:
             "flush_triggers": dict(sorted(self.flush_triggers.items())),
             "start_tiers": dict(sorted(self.start_tiers.items())),
             "evicted_results": self.evicted_results,
+            "cancelled_requests": self._cancelled.value,
+            "deadline_timeouts": self._deadline_timeouts.value,
             "dispatch": self.dispatcher.telemetry(),
         }
         if self.cfg.pair_capacity == "auto":

@@ -31,6 +31,18 @@ class StragglerMonitor:
     slow_streak: int = 0
     steps: int = 0
 
+    def is_slow(self, seconds: float) -> bool:
+        """Pure check: would this wall time count as a straggler now?
+
+        Unlike :meth:`record` this neither advances the warmup nor moves
+        the EWMA — callers that want to *count* slow events separately
+        from the re-mesh signal (e.g. the service dispatcher's
+        ``svc.straggler_flights``) check first, then record.
+        """
+        if self.steps <= 3 or self.ewma == 0:  # warmup: nothing to compare
+            return False
+        return seconds > self.threshold * self.ewma
+
     def record(self, seconds: float) -> bool:
         """Returns True if the driver should consider re-meshing."""
         self.steps += 1

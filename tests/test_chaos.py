@@ -1,0 +1,503 @@
+"""Chaos layer: seeded fault injection, deadlines/cancel/backoff, and
+graceful degradation — the recovery machinery exercised deterministically.
+
+The contract under test everywhere: **innocents always complete, byte-
+identical to an un-faulted run**; only explicitly poisoned requests fail,
+and they fail *naming their rid*.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.chaos import ChaosError, FaultPlan, resolve_chaos
+from repro.core import SortConfig, SortExecutor
+from repro.delta import SortedView
+from repro.service import (
+    ServiceConfig,
+    SortCancelledError,
+    SortService,
+    SortServiceError,
+    SortTimeoutError,
+)
+from repro.train.elastic import StragglerMonitor
+
+pytestmark = pytest.mark.fast
+
+POISON_LEN = 777  # unique request length the poison monkeypatches key on
+
+
+def _arrays(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(-(2**31), 2**31, s).astype(np.int32) for s in sizes]
+
+
+# ------------------------------------------------------------- the plan
+def test_fault_plan_draws_are_deterministic_and_order_independent():
+    """The same (seed, kind, key) decides identically regardless of how
+    many other draws happened first — async scheduling cannot perturb the
+    fault schedule."""
+    a = FaultPlan(seed=5, capacity_fault_rate=0.5, capacity_fault_rungs=(0, 1))
+    b = FaultPlan(seed=5, capacity_fault_rate=0.5, capacity_fault_rungs=(0, 1))
+    # burn unrelated draws on b only
+    for i in range(50):
+        b.straggle_delay(i)
+    hits_a = [(s, r) for s in range(40) for r in (0, 1) if a.fault_capacity(s, r)]
+    hits_b = [(s, r) for s in range(40) for r in (0, 1) if b.fault_capacity(s, r)]
+    assert hits_a == hits_b
+    assert hits_a  # rate 0.5 over 80 opportunities: must fire
+    assert len(hits_a) < 80  # ... and must not fire everywhere
+
+
+def test_fault_plan_budget_caps_total_injections():
+    plan = FaultPlan(seed=1, capacity_fault_rate=1.0, max_faults=3)
+    fired = sum(plan.fault_capacity(s, 0) for s in range(10))
+    assert fired == 3
+    assert plan.injected_total == 3
+
+
+def test_transient_faults_fire_each_rid_set_at_most_once():
+    plan = FaultPlan(seed=2, transient_error_rate=1.0)
+    with pytest.raises(ChaosError):
+        plan.check_launch(0, (1, 2, 3))
+    plan.check_launch(1, (1, 2, 3))  # same rid-set: recovered, no re-fault
+    with pytest.raises(ChaosError):
+        plan.check_launch(2, (1, 2))  # different set: its own fault
+
+
+def test_resolve_chaos_duck_types():
+    plan = FaultPlan()
+    assert resolve_chaos(None) is None
+    assert resolve_chaos(plan) is plan
+    with pytest.raises(TypeError):
+        resolve_chaos(object())
+
+
+def test_chaos_is_hash_excluded_from_sort_config():
+    """A faulted config and a clean one are EQUAL and share prepare keys —
+    chaos must never fragment the compiled-program registry (same contract
+    as ``obs``)."""
+    clean = SortConfig(p=4, n_per_proc=64)
+    faulted = SortConfig(p=4, n_per_proc=64, chaos=FaultPlan(seed=9))
+    assert clean == faulted
+    assert hash(clean) == hash(faulted)
+    assert clean.prepare_key() == faulted.prepare_key()
+
+
+# ------------------------------------------------------ capacity faults
+def test_capacity_fault_escalates_byte_identically():
+    """A forced rung fault walks the ladder exactly like an organic
+    overflow: a later tier serves the sort, and the output bytes are
+    identical to the clean run."""
+    a = _arrays([600], seed=1)[0]
+    ex = SortExecutor()
+    clean = SortService(
+        ServiceConfig(p=4, pair_capacity="whp"), executor=ex
+    ).sort_one(a)
+    plan = FaultPlan(seed=0, capacity_fault_rate=1.0, capacity_fault_rungs=(0, 1, 2))
+    faulted = SortService(
+        ServiceConfig(p=4, pair_capacity="whp", chaos=plan), executor=ex
+    ).sort_one(a)
+    assert plan.injected.get("capacity_fault", 0) >= 1
+    assert faulted.tier != clean.tier  # it really escalated further
+    assert np.array_equal(clean.keys, faulted.keys)
+    assert np.array_equal(clean.order, faulted.order)
+
+
+def test_capacity_fault_never_fires_on_terminal_rung():
+    """Rate 1.0 over every rung still terminates: the terminal
+    allgather rung is never faulted, so the sort always completes."""
+    a = _arrays([400], seed=2)[0]
+    plan = FaultPlan(
+        seed=0, capacity_fault_rate=1.0, capacity_fault_rungs=(0, 1, 2, 3, 4)
+    )
+    svc = SortService(
+        ServiceConfig(p=4, pair_capacity="whp", chaos=plan),
+        executor=SortExecutor(),
+    )
+    res = svc.sort_one(a)
+    assert np.array_equal(res.keys, np.sort(a))
+    assert res.tier == "allgather"  # rode the whole ladder
+
+
+# -------------------------------------------------------- launch faults
+def test_poison_rid_fails_naming_rid_innocents_byte_identical():
+    """Acceptance core: a FaultPlan poison rid fails terminally with the
+    rid in the message; every innocent in the same batch completes with
+    bytes identical to an un-faulted run of the same mix."""
+    arrays = _arrays([300, 250, 400, 200], seed=3)
+    ex = SortExecutor()
+    ref_svc = SortService(ServiceConfig(p=4), executor=ex)
+    ref_futs = [ref_svc.submit(a) for a in arrays]
+    ref_svc.flush()
+
+    plan = FaultPlan(seed=3, poison_rids=(1,))
+    svc = SortService(ServiceConfig(p=4, chaos=plan), executor=ex)
+    futs = [svc.submit(a) for a in arrays]
+    svc.flush()  # never raises
+    exc = futs[1].exception()
+    assert isinstance(exc, SortServiceError) and "rid=1" in str(exc)
+    assert isinstance(exc.__cause__, ChaosError)
+    for i in (0, 2, 3):
+        assert futs[i].exception() is None
+        r, r0 = futs[i].result(), ref_futs[i].result()
+        assert np.array_equal(r.keys, r0.keys)
+        assert np.array_equal(r.order, r0.order)
+    tele = svc.telemetry()["dispatch"]
+    assert tele["failsink_errors"] == 1
+    assert tele["recovered_batches"] >= 1
+
+
+def test_transient_launch_fault_recovers_all_requests():
+    """A transient fault (fires once per rid-set) is absorbed by failsink
+    re-dispatch: every request completes, recovery is visible in
+    telemetry."""
+    arrays = _arrays([300, 250, 400], seed=4)
+    plan = FaultPlan(seed=0, fail_batches=(0,))  # first launch faults once
+    svc = SortService(ServiceConfig(p=4, chaos=plan), executor=SortExecutor())
+    futs = [svc.submit(a) for a in arrays]
+    svc.flush()
+    for a, f in zip(arrays, futs):
+        assert np.array_equal(f.result().keys, np.sort(a))
+        assert f.result().failsink
+    tele = svc.telemetry()["dispatch"]
+    assert plan.injected.get("launch_error") == 1
+    assert tele["recovered_batches"] >= 1
+    assert tele["failsink_errors"] == 0
+
+
+# ---------------------------------------------- stragglers + the monitor
+def test_straggler_monitor_is_slow_is_pure():
+    m = StragglerMonitor(threshold=2.0)
+    for _ in range(6):
+        m.record(0.01)
+    ewma = m.ewma
+    assert m.is_slow(0.1) and not m.is_slow(0.01)
+    assert m.ewma == ewma  # no state advanced
+    assert not StragglerMonitor().is_slow(100.0)  # warmup: never slow
+
+
+def test_injected_straggle_counts_straggler_flights():
+    """An explicit straggle_flights delay inflates one flight's wall time
+    past the EWMA threshold and lands in svc.straggler_flights — the
+    elastic monitor's first production wiring."""
+    plan = FaultPlan(seed=0, straggle_flights=(5,), straggle_s=0.25)
+    svc = SortService(
+        ServiceConfig(p=4, chaos=plan),
+        executor=SortExecutor(),
+    )
+    # tighten the monitor so CI timing noise can't mask the injection
+    svc.dispatcher.stragglers = StragglerMonitor(threshold=3.0)
+    for a in _arrays([256] * 7, seed=5):
+        svc.sort_one(a)
+    assert plan.injected.get("straggle") == 1
+    assert svc.dispatcher.straggler_flights >= 1
+
+
+# ------------------------------------------------- deadlines and cancel
+def test_deadline_expires_pending_request_with_timeout_naming_rid():
+    svc = SortService(ServiceConfig(p=4), executor=SortExecutor())
+    keep = svc.submit(_arrays([100], seed=6)[0])
+    doomed = svc.submit(_arrays([120], seed=7)[0], deadline_s=0.001)
+    time.sleep(0.01)
+    svc.run_pending(max_steps=0)
+    exc = doomed.exception()
+    assert isinstance(exc, SortTimeoutError)
+    assert f"rid={doomed.rid}" in str(exc)
+    assert svc.telemetry()["deadline_timeouts"] == 1
+    # the innocent neighbour still completes normally
+    assert keep.exception() is None and keep.result() is not None
+
+
+def test_deadline_expires_formed_but_unlaunched_request():
+    """A request already formed into the dispatcher queue (but not
+    launched) is unpicked at expiry; its batch re-forms and the remaining
+    rids complete."""
+    svc = SortService(ServiceConfig(p=4, max_in_flight=1), executor=SortExecutor())
+    blocker = svc.submit(_arrays([400], seed=8)[0])
+    svc.flush_async()  # blocker launches, holding the only slot
+    a1, a2 = _arrays([200, 220], seed=9)
+    keep = svc.submit(a1)
+    doomed = svc.submit(a2, deadline_s=0.001)
+    svc.flush_async()  # formed + queued behind the blocker, not launched
+    time.sleep(0.01)
+    svc.run_pending(max_steps=0)
+    assert isinstance(doomed.exception(), SortTimeoutError)
+    assert np.array_equal(keep.result().keys, np.sort(a1))
+    assert np.array_equal(blocker.result().keys, np.sort(_arrays([400], seed=8)[0]))
+
+
+def test_launched_requests_are_never_expired():
+    svc = SortService(ServiceConfig(p=4), executor=SortExecutor())
+    a = _arrays([300], seed=10)[0]
+    fut = svc.submit(a, deadline_s=0.001)
+    svc.flush_async()  # launches immediately — past the point of expiry
+    time.sleep(0.01)
+    svc.run_pending()
+    assert fut.exception() is None
+    assert np.array_equal(fut.result().keys, np.sort(a))
+
+
+def test_cancel_pending_request_never_launches():
+    svc = SortService(ServiceConfig(p=4), executor=SortExecutor())
+    fut = svc.submit(_arrays([100], seed=11)[0])
+    assert fut.cancel()
+    assert fut.cancelled() and fut.done()
+    assert svc.dispatcher.launches == 0
+    with pytest.raises(SortCancelledError, match=f"rid={fut.rid}"):
+        fut.result()
+    assert not fut.cancel()  # idempotent: already resolved
+
+
+def test_cancel_unpicks_queued_request_and_batch_reforms():
+    """Cancelling a formed-but-queued request re-forms its batch without
+    it: the cancelled rid never launches, its batchmates complete."""
+    svc = SortService(ServiceConfig(p=4, max_in_flight=1), executor=SortExecutor())
+    blocker = svc.submit(_arrays([400], seed=12)[0])
+    svc.flush_async()  # occupy the only launch slot
+    arrays = _arrays([150, 170, 190], seed=13)
+    futs = [svc.submit(a) for a in arrays]
+    svc.flush_async()  # formed into the dispatcher queue behind the blocker
+    assert futs[1].cancel()
+    assert futs[1].cancelled()
+    svc.flush()
+    assert np.array_equal(futs[0].result().keys, np.sort(arrays[0]))
+    assert np.array_equal(futs[2].result().keys, np.sort(arrays[2]))
+    assert blocker.exception() is None
+    assert svc.dispatcher.cancelled_rids == 1
+
+
+def test_cancel_after_launch_returns_false_and_completes():
+    svc = SortService(ServiceConfig(p=4), executor=SortExecutor())
+    a = _arrays([250], seed=14)[0]
+    fut = svc.submit(a)
+    svc.flush_async()  # launched
+    assert not fut.cancel()
+    assert np.array_equal(fut.result().keys, np.sort(a))
+
+
+# ------------------------------------- retry budget and circuit breaker
+def test_retry_budget_explodes_to_solos(monkeypatch):
+    """Budget 0: a failed multi-rid batch skips bisection entirely and
+    isolates every rid solo at once — innocents still complete."""
+    import repro.service.dispatch as disp_mod
+
+    orig = disp_mod.segmented_sort_launch
+
+    def poisoned(packed, **kw):  # fails only while fused with others
+        if POISON_LEN in packed.sizes and len(packed.sizes) > 1:
+            raise RuntimeError("backend error (simulated)")
+        return orig(packed, **kw)
+
+    monkeypatch.setattr(disp_mod, "segmented_sort_launch", poisoned)
+    svc = SortService(
+        ServiceConfig(p=4, fault_retry_budget=0, breaker_threshold=0),
+        executor=SortExecutor(),
+    )
+    arrays = _arrays([200, POISON_LEN, 250, 300], seed=15)
+    futs = [svc.submit(a) for a in arrays]
+    svc.flush()
+    for a, f in zip(arrays, futs):
+        assert np.array_equal(f.result().keys, np.sort(a))
+    tele = svc.telemetry()["dispatch"]
+    assert tele["retry_budget_exceeded"] == 1
+    assert tele["failsink_splits"] == 0  # no bisection happened
+
+
+def test_circuit_breaker_degrades_bucket_to_solo_exact(monkeypatch):
+    """After breaker_threshold consecutive fused failures in one bucket,
+    fresh multi-rid traffic for that bucket dispatches per-request at the
+    exact tier — the poisoned bucket stops dragging innocents into
+    failing fused launches, and everything completes."""
+    import repro.service.dispatch as disp_mod
+
+    orig = disp_mod.segmented_sort_launch
+
+    def poisoned(packed, **kw):
+        if POISON_LEN in packed.sizes and len(packed.sizes) > 1:
+            raise RuntimeError("backend error (simulated)")
+        return orig(packed, **kw)
+
+    monkeypatch.setattr(disp_mod, "segmented_sort_launch", poisoned)
+    svc = SortService(
+        ServiceConfig(p=4, breaker_threshold=2), executor=SortExecutor()
+    )
+    sizes = (200, POISON_LEN, 250)
+    for rnd in range(3):
+        arrays = _arrays(sizes, seed=20 + rnd)
+        futs = [svc.submit(a) for a in arrays]
+        svc.flush()
+        for a, f in zip(arrays, futs):
+            assert np.array_equal(f.result().keys, np.sort(a))
+    tele = svc.telemetry()["dispatch"]
+    assert tele["breaker_opened"] >= 1
+    assert tele["breaker_degraded_batches"] >= 1
+
+
+def test_circuit_breaker_closes_after_cooldown(monkeypatch):
+    """Past the cooldown the bucket readmits fused batches (half-open);
+    clean completions keep it closed."""
+    import repro.service.dispatch as disp_mod
+
+    orig = disp_mod.segmented_sort_launch
+    fail = {"on": True}
+
+    def flaky(packed, **kw):
+        if fail["on"] and len(packed.sizes) > 1:
+            raise RuntimeError("backend error (simulated)")
+        return orig(packed, **kw)
+
+    monkeypatch.setattr(disp_mod, "segmented_sort_launch", flaky)
+    svc = SortService(
+        # cooldown far longer than any compile stall in round 1 — the test
+        # expires it explicitly by rewinding the open timestamp
+        ServiceConfig(p=4, breaker_threshold=1, breaker_cooldown_s=60.0),
+        executor=SortExecutor(),
+    )
+    arrays = _arrays([200, 250], seed=30)
+    futs = [svc.submit(a) for a in arrays]
+    svc.flush()  # fused failure opens the breaker (threshold 1)
+    assert all(f.exception() is None for f in futs)
+    assert svc.dispatcher.breaker_opened == 1
+    fail["on"] = False
+    # still inside the open window: same-bucket multi-rid traffic degrades
+    arrays2 = _arrays([200, 250], seed=31)
+    futs2 = [svc.submit(a) for a in arrays2]
+    svc.flush()
+    assert all(f.exception() is None for f in futs2)
+    tele = svc.telemetry()["dispatch"]
+    assert tele["breaker_degraded_batches"] == 1
+    # cooldown passes (rewound, not slept) — breaker half-opens
+    d = svc.dispatcher
+    for bucket in list(d._breaker_open_at):
+        d._breaker_open_at[bucket] -= 61.0
+    arrays3 = _arrays([200, 250], seed=32)
+    futs3 = [svc.submit(a) for a in arrays3]
+    svc.flush()  # fused again, completes cleanly, breaker stays closed
+    assert all(f.exception() is None for f in futs3)
+    tele = svc.telemetry()["dispatch"]
+    assert tele["breaker_degraded_batches"] == 1  # no new degradation
+    assert tele["breaker_opened"] == 1  # never re-opened
+
+
+# --------------------------------------------------- delta fold corruption
+def test_fold_corruption_falls_back_to_resort_byte_identically():
+    """An injected corrupt Δ run trips the post-merge monotonicity check;
+    the view resorts from its preserved pre-fold state and stays
+    byte-identical to the cold sort of the concatenated history."""
+    rng = np.random.default_rng(32)
+    b1 = rng.integers(0, 1000, 400).astype(np.int32)
+    b2 = rng.integers(0, 1000, 60).astype(np.int32)
+    plan = FaultPlan(seed=0, corrupt_folds=(0,))
+    v = SortedView(p=4, chaos_handle=plan)
+    v.fold(b1, (np.arange(400, dtype=np.int64),))
+    route = v.fold(b2, (np.arange(400, 460, dtype=np.int64),))
+    assert route == "resort"  # the fold fell back
+    assert plan.injected.get("fold_corruption") == 1
+    cat = np.concatenate([b1, b2])
+    assert np.array_equal(v.keys, np.sort(cat))
+    assert np.array_equal(v.payloads[0], np.argsort(cat, kind="stable"))
+    counts = {
+        str(lbl["view"]): c.value
+        for lbl, c in obs.metrics().collect("delta.fold_fallback_resorts")
+        if str(lbl["view"]) == v.label
+    }
+    assert counts[v.label] == 1
+
+
+def test_uncorrupted_folds_never_fall_back():
+    rng = np.random.default_rng(33)
+    v = SortedView(p=4, chaos_handle=FaultPlan(seed=0))  # no corruption config
+    hist = []
+    for i in range(3):
+        b = rng.integers(0, 1000, 200).astype(np.int32)
+        base = sum(len(h) for h in hist)
+        v.fold(b, (np.arange(base, base + 200, dtype=np.int64),))
+        hist.append(b)
+    cat = np.concatenate(hist)
+    assert np.array_equal(v.keys, np.sort(cat))
+    counts = {
+        str(lbl["view"]): c.value
+        for lbl, c in obs.metrics().collect("delta.fold_fallback_resorts")
+        if str(lbl["view"]) == v.label
+    }
+    assert counts.get(v.label, 0) == 0
+
+
+# ------------------------------------------------ driver pump and thread
+def test_run_pending_fires_flush_after_s_without_any_caller():
+    """ROADMAP gap: flush_after_s used to fire only when somebody called
+    in. run_pending() is that somebody — a quiet service still flushes."""
+    svc = SortService(
+        ServiceConfig(p=4, flush_after_s=0.005), executor=SortExecutor()
+    )
+    a = _arrays([200], seed=34)[0]
+    fut = svc.submit(a)
+    time.sleep(0.02)
+    assert not fut.done()
+    svc.run_pending(max_steps=1)  # no submit, no claim — just the pump
+    assert svc.pending == 0  # deadline flush fired
+    assert fut.done()
+    assert np.array_equal(fut.result().keys, np.sort(a))
+    assert svc.flush_triggers.get("deadline", 0) == 1
+
+
+def test_driver_thread_resolves_futures_in_background():
+    svc = SortService(
+        ServiceConfig(p=4, flush_after_s=0.002), executor=SortExecutor()
+    )
+    svc.start_driver(interval_s=0.002)
+    try:
+        a = _arrays([300], seed=35)[0]
+        fut = svc.submit(a)
+        deadline = time.time() + 5.0
+        while not fut.done() and time.time() < deadline:
+            time.sleep(0.005)
+        assert fut.done(), "driver thread never resolved the future"
+        assert np.array_equal(fut.result().keys, np.sort(a))
+    finally:
+        svc.stop_driver()
+
+
+def test_chaos_service_end_to_end_soak_innocents_byte_identical():
+    """Acceptance: seeded FaultPlan (capacity faults + 2 poison rids +
+    stragglers) over a request mix — every innocent byte-identical to the
+    un-faulted run; both poisons fail naming their rid."""
+    sizes = [200, 350, 150, 420, 260, 180, 310, 240]
+    arrays = _arrays(sizes, seed=36)
+    poison = (2, 5)
+    ex = SortExecutor()
+    ref_svc = SortService(ServiceConfig(p=4, max_batch_keys=1 << 13), executor=ex)
+    ref = {f.rid: f for f in [ref_svc.submit(a) for a in arrays]}
+    ref_svc.flush()
+
+    plan = FaultPlan(
+        seed=36,
+        poison_rids=poison,
+        capacity_fault_rate=0.5,
+        capacity_fault_rungs=(0,),
+        transient_error_rate=0.4,
+        straggle_flights=(0,),
+        straggle_s=0.002,
+    )
+    svc = SortService(
+        ServiceConfig(p=4, max_batch_keys=1 << 13, chaos=plan), executor=ex
+    )
+    futs = [svc.submit(a) for a in arrays]
+    svc.flush()
+    innocents_failed = 0
+    for f in futs:
+        if f.rid in poison:
+            exc = f.exception()
+            assert isinstance(exc, SortServiceError)
+            assert f"rid={f.rid}" in str(exc)
+            continue
+        if f.exception() is not None:
+            innocents_failed += 1
+            continue
+        r, r0 = f.result(), ref[f.rid].result()
+        assert np.array_equal(r.keys, r0.keys)
+        assert np.array_equal(r.order, r0.order)
+    assert innocents_failed == 0
+    assert plan.injected_total > 0

@@ -1,5 +1,7 @@
 """Async dispatch: futures, in-flight batches, failsink fault isolation,
 bounded unclaimed store, admission-aware forming, telemetry memoization."""
+import time
+
 import numpy as np
 import pytest
 
@@ -139,8 +141,9 @@ def test_poison_request_failsink_terminal_error_spares_the_batch(monkeypatch):
     tele = svc.telemetry()
     assert tele["requests_failed"] == 1
     assert tele["dispatch"]["failsink_errors"] == 1
-    # bisection isolated the poison (its failed solo dispatch WAS its retry)
+    # bisection isolated the poison; its one solo retry also failed
     assert tele["dispatch"]["failsink_splits"] >= 2
+    assert tele["dispatch"]["failsink_solo_retries"] >= 1
 
 
 def test_sort_many_surfaces_failure_as_service_error_not_keyerror(monkeypatch):
@@ -241,3 +244,83 @@ def test_form_ready_holds_partial_tail_and_flush_ready_launches_full():
     assert svc.pending == 0
     for a, f in zip(arrays, futs):
         assert np.array_equal(f.result().keys, np.sort(a))
+
+
+def test_two_poison_requests_in_one_batch_both_isolated(monkeypatch):
+    """Multi-poison failsink: two poison requests fused into one batch are
+    BOTH bisected down to terminal solo failures naming their own rid, and
+    every innocent in the batch completes."""
+    import repro.service.dispatch as disp_mod
+
+    orig = disp_mod.segmented_sort_launch
+    POISON_LEN_2 = 778
+
+    def poisoned(packed, **kw):  # each poison fails every dispatch it rides
+        if POISON_LEN in packed.sizes or POISON_LEN_2 in packed.sizes:
+            raise RuntimeError("backend error (simulated)")
+        return orig(packed, **kw)
+
+    monkeypatch.setattr(disp_mod, "segmented_sort_launch", poisoned)
+    svc = SortService(
+        # breaker off: this test pins the pure-bisection path
+        ServiceConfig(p=8, breaker_threshold=0),
+        executor=SortExecutor(),
+    )
+    sizes = [300, POISON_LEN, 250, POISON_LEN_2, 200, 350]
+    arrays = _arrays(sizes, seed=12)
+    futs = [svc.submit(a) for a in arrays]
+    svc.flush()  # never raises
+    for i, (a, f) in enumerate(zip(arrays, futs)):
+        if i in (1, 3):
+            exc = f.exception()
+            assert isinstance(exc, SortServiceError), (i, exc)
+            assert exc.rids == (f.rid,) and f"rid={f.rid}" in str(exc)
+        else:
+            assert f.exception() is None, (i, f.exception())
+            assert np.array_equal(f.result().keys, np.sort(a))
+    tele = svc.telemetry()["dispatch"]
+    assert tele["failsink_errors"] == 2
+    assert svc.telemetry()["requests_failed"] == 2
+
+
+def test_backoff_does_not_starve_innocents_behind_retry_queue(monkeypatch):
+    """Backoff ordering: while a failed batch's retries back off, freshly
+    enqueued innocent batches launch ahead of them — the pump scans past
+    backing-off entries instead of waiting at the queue head."""
+    import repro.service.dispatch as disp_mod
+
+    orig = disp_mod.segmented_sort_launch
+    launched = []
+
+    def recording(packed, **kw):
+        launched.append(tuple(packed.sizes))
+        if POISON_LEN in packed.sizes:
+            raise RuntimeError("backend error (simulated)")
+        return orig(packed, **kw)
+
+    monkeypatch.setattr(disp_mod, "segmented_sort_launch", recording)
+    svc = SortService(
+        ServiceConfig(
+            p=8,
+            failsink_backoff_s=0.2,
+            failsink_backoff_max_s=0.2,
+            breaker_threshold=0,
+            max_in_flight=1,
+        ),
+        executor=SortExecutor(),
+    )
+    poison_fut = svc.submit(_arrays([POISON_LEN], seed=13)[0])
+    svc.flush_async()  # poison launches solo, fails, requeues with backoff
+    assert launched == [(POISON_LEN,)]  # retry is parked behind not_before
+    a = _arrays([200], seed=14)[0]
+    innocent = svc.submit(a)
+    res = innocent.result()  # must NOT wait out the poison's 0.2s backoff
+    assert np.array_equal(res.keys, np.sort(a))
+    # the innocent launched ahead of the backed-off retry: the pump scanned
+    # past the not_before-gated head instead of blocking on it
+    first_retry = launched.index((POISON_LEN,), 1) if \
+        launched.count((POISON_LEN,)) > 1 else len(launched)
+    assert launched.index((200,)) < first_retry, launched
+    with pytest.raises(SortServiceError, match=f"rid={poison_fut.rid}"):
+        poison_fut.result()  # drives through the backoff window to terminal
+    assert launched.count((POISON_LEN,)) == 2  # original + its one solo retry
